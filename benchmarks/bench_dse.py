@@ -1,0 +1,49 @@
+"""Paper §8.2 / Table 4 / Fig. 7: design-space exploration — DOpt derives an
+optimized accelerator architecture per workload by gradient descent, with
+the convergence curve recorded (single-pass, seconds — vs sweep hours)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, save_json
+from repro.core import ArchParams, TechParams, optimize, simulate
+from repro.workloads import get_workload, lm_cell
+
+WORKLOADS = {
+    "resnet50": lambda: get_workload("resnet50"),
+    "bert_base": lambda: get_workload("bert_base"),
+    "dlrm": lambda: get_workload("dlrm"),
+    "qwen2.5-32b:train": lambda: lm_cell("qwen2.5-32b", "train_4k"),
+    "falcon-mamba:decode": lambda: lm_cell("falcon-mamba-7b", "decode_32k"),
+}
+
+
+def run(quick: bool = False) -> dict:
+    out = {}
+    steps = 20 if quick else 60
+    items = list(WORKLOADS.items())[:3] if quick else list(WORKLOADS.items())
+    for name, make in items:
+        g = make()
+        t0 = time.perf_counter()
+        res = optimize(g, objective="edp", opt_over="arch", steps=steps, lr=0.1)
+        wall = time.perf_counter() - t0
+        a = res.arch
+        derived = dict(
+            sys_arr=f"{float(a.sys_arr_x):.0f}x{float(a.sys_arr_y):.0f}x{float(a.sys_arr_n):.0f}",
+            vect=f"{float(a.vect_width):.0f}x{float(a.vect_n):.0f}",
+            gbuf_mb=round(float(a.capacity[1]) / 2**20, 1),
+            freq_ghz=round(float(a.frequency) / 1e9, 2),
+        )
+        gain = res.history["edp"][0] / max(res.history["edp"][-1], 1e-300)
+        row = dict(workload=name, edp_gain=round(gain, 1), wall_s=round(wall, 1),
+                   epochs=len(res.history["edp"]), **derived)
+        out[name] = dict(row=row, curve=res.history["edp"][:: max(1, steps // 20)])
+        emit("dse", row)
+    save_json("dse", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,73 @@
+"""§Roofline: read the dry-run artifacts (results/dryrun/*.json) and emit the
+three-term roofline table per (arch x shape x mesh):
+
+  t_compute    = HLO_FLOPs_per_device / peak_FLOPs          (197 TF bf16)
+  t_memory     = HLO_bytes_per_device / HBM_bw              (819 GB/s)
+  t_collective = link_bytes_per_device / link_bw            (~50 GB/s ICI)
+
+plus MODEL_FLOPS = 6*N(_active)*D (2*N*D for inference) and the useful-
+compute ratio MODEL_FLOPS / HLO_FLOPs (catches remat/redundancy waste),
+and the dominant-term bottleneck tag."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import RESULTS_DIR, emit, save_json
+from repro.configs import SHAPES, get_config
+from repro.launch.dryrun import HBM_BW, LINK_BW, PEAK_FLOPS
+
+
+def model_flops_per_device(arch: str, shape_name: str, chips: int) -> float:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens / chips
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens / chips
+    return 2.0 * n * shape.global_batch / chips  # decode: one token/slot
+
+
+def run(dryrun_dir: str | None = None, quick: bool = False) -> dict:
+    d = dryrun_dir
+    if d is None:  # prefer the corrected baseline sweep
+        for cand in ("dryrun_base", "dryrun"):
+            p = os.path.join(RESULTS_DIR, cand)
+            if os.path.isdir(p) and glob.glob(os.path.join(p, "*.json")):
+                d = p
+                break
+        else:
+            d = os.path.join(RESULTS_DIR, "dryrun")
+    rows = []
+    for fn in sorted(glob.glob(os.path.join(d, "*.json"))):
+        r = json.load(open(fn))
+        if r.get("skipped") or not r.get("ok") or "roofline" not in r:
+            continue
+        if "flops_per_device" not in r:
+            continue
+        tc = r["flops_per_device"] / PEAK_FLOPS
+        tm = r["bytes_per_device"] / HBM_BW
+        tl = r.get("collectives", {}).get("total_bytes", 0) / LINK_BW
+        bound = max((tc, "compute"), (tm, "memory"), (tl, "collective"))[1]
+        mf = model_flops_per_device(r["arch"], r["shape"], r["chips"])
+        step = max(tc, tm, tl)
+        row = dict(
+            arch=r["arch"], shape=r["shape"], mesh=r["mesh"],
+            t_compute=f"{tc:.3e}", t_memory=f"{tm:.3e}", t_collective=f"{tl:.3e}",
+            bottleneck=bound,
+            useful_ratio=round(mf / max(r["flops_per_device"], 1.0), 3),
+            mfu_bound=round(mf / PEAK_FLOPS / max(step, 1e-12), 4),
+            hbm_gb=r.get("hbm_per_device_gb"),
+        )
+        rows.append(row)
+        emit("roofline", row)
+    save_json("roofline", rows)
+    return {"rows": rows}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,49 @@
+"""Serving benchmark: the continuous-batching engine on a reduced qwen
+config — throughput, per-token latency and TTFT with mixed request sizes.
+(The paper-side serving numbers are the decode/prefill roofline cells;
+this measures the ENGINE's scheduling overhead end-to-end on CPU.)"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit, save_json
+from repro.configs import get_config
+from repro.models.model import build_model
+from repro.serving import Engine, Request
+
+
+def run(quick: bool = False) -> dict:
+    cfg = get_config("qwen2.5-32b").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+
+    n_req = 6 if quick else 16
+    out = {}
+    for slots in (1, 4):
+        eng = Engine(model, params, slots=slots, max_len=128)
+        t0 = time.perf_counter()
+        for i in range(n_req):
+            eng.submit(Request(
+                rid=i, prompt=rng.integers(0, cfg.vocab_size, (int(rng.integers(4, 20)),)).astype(np.int32),
+                max_tokens=8, temperature=0.0, seed=i))
+        done = eng.run()
+        wall = time.perf_counter() - t0
+        toks = sum(len(r.generated) for r in done)
+        ttft = float(np.mean([r.t_first - r.t_submit for r in done]))
+        row = dict(slots=slots, requests=len(done), tok_per_s=round(toks / wall, 1),
+                   mean_ttft_ms=round(ttft * 1e3, 1), wall_s=round(wall, 2))
+        out[f"slots{slots}"] = row
+        emit("serving", row)
+    gain = out["slots4"]["tok_per_s"] / max(out["slots1"]["tok_per_s"], 1e-9)
+    emit("serving", dict(batching_throughput_gain=round(gain, 2)))
+    out["batching_gain"] = gain
+    save_json("serving", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

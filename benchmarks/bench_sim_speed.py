@@ -1,0 +1,97 @@
+"""Paper §8.1 / Fig. 4 / Table 1: simulator speed + accuracy.
+
+DSim (closed-form vectorized vertex scan, jit) vs the reference per-tile
+cycle-walker (refsim.py — our stand-in for SCALE-Sim/Timeloop-class tools,
+same per-tile-stepping asymptotics). Reported per workload:
+
+  * accuracy  = 1 - |cycles_dsim - cycles_ref| / cycles_ref  (paper: 80-97%)
+  * speedup   = wall_ref / wall_dsim                          (paper: ~1000x)
+
+plus the popsim Pallas kernel evaluating a 512-candidate population, which
+is the per-candidate cost DOpt's DSE pays.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, save_json
+from repro.core import ArchParams, TechParams, simulate_chw, specialize
+from repro.core.refsim import reference_simulate
+from repro.kernels import pack_chw, pack_graph, popsim
+from repro.workloads import get_workload, lm_cell
+
+CLASSIC = ["resnet50", "vgg16", "lstm", "dlrm", "bert_base", "bert_large",
+           "gcn", "graphsage", "stencil2d", "merge_sort", "bfs_graph"]
+LM = [("qwen2.5-32b", "prefill_32k"), ("granite-3-8b", "train_4k"),
+      ("kimi-k2-1t-a32b", "decode_32k"), ("falcon-mamba-7b", "long_500k"),
+      ("zamba2-1.2b", "train_4k")]
+
+
+def run(quick: bool = False) -> dict:
+    chw = specialize(TechParams.default(), ArchParams.default())
+    rows = []
+    names = CLASSIC[:4] if quick else CLASSIC
+    lms = LM[:2] if quick else LM
+    graphs = [(n, get_workload(n)) for n in names]
+    graphs += [(f"{a}:{s}", lm_cell(a, s)) for a, s in lms]
+
+    sim = jax.jit(lambda g: simulate_chw(chw, g).cycles)
+    for name, g in graphs:
+        cyc = float(sim(g))  # compile excluded from timing below
+        t0 = time.perf_counter()
+        for _ in range(5):
+            cyc = float(sim(g))
+        t_dsim = (time.perf_counter() - t0) / 5
+
+        t0 = time.perf_counter()
+        ref = reference_simulate(chw, g)
+        t_ref = time.perf_counter() - t0
+
+        acc = 1.0 - abs(cyc - ref["cycles"]) / max(ref["cycles"], 1.0)
+        rows.append(dict(workload=name, vertices=g.n_vertices,
+                         cycles_dsim=cyc, cycles_ref=ref["cycles"],
+                         accuracy=round(acc, 4),
+                         t_dsim_ms=round(t_dsim * 1e3, 3),
+                         t_ref_ms=round(t_ref * 1e3, 3),
+                         speedup=round(t_ref / max(t_dsim, 1e-9), 1)))
+        emit("sim_speed", rows[-1])
+
+    # population evaluation (the DSE inner loop): batched Pallas kernel
+    P = 128 if quick else 512
+    scales = jnp.linspace(0.5, 2.0, P)
+    chws = jax.vmap(
+        lambda s: specialize(
+            dataclasses.replace(TechParams.default(),
+                                cell_read_latency=TechParams.default().cell_read_latency * s),
+            ArchParams.default())
+    )(scales)
+    g = get_workload("bert_base")
+    gp, cp = pack_graph(g), pack_chw(chws)
+    out = popsim(gp, cp)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    out = popsim(gp, cp)
+    jax.block_until_ready(out)
+    t_pop = time.perf_counter() - t0
+    per_candidate_us = t_pop / P * 1e6
+    emit("sim_speed", dict(workload=f"popsim_{P}cand", per_candidate_us=round(per_candidate_us, 1)))
+
+    accs = [r["accuracy"] for r in rows]
+    sps = [r["speedup"] for r in rows]
+    summary = dict(rows=rows, accuracy_min=min(accs), accuracy_max=max(accs),
+                   accuracy_mean=float(np.mean(accs)),
+                   speedup_geomean=float(np.exp(np.mean(np.log(np.maximum(sps, 1e-9))))),
+                   popsim_per_candidate_us=per_candidate_us)
+    emit("sim_speed", dict(summary="1", acc_range=f"{min(accs):.2f}..{max(accs):.2f}",
+                           speedup_geomean=round(summary["speedup_geomean"], 1)))
+    save_json("sim_speed", summary)
+    return summary
+
+
+if __name__ == "__main__":
+    run()

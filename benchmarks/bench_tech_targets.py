@@ -1,0 +1,64 @@
+"""Paper §8.3 / Table 3 / Fig. 3: technology-target derivation.
+
+(a) Table 3 — ranked technology-parameter importance per workload family
+    (vision / language / recommendation), for both execution-time and
+    energy objectives, from accumulated gradient elasticities.
+(b) Fig. 3 — technology targets for a 100x EDP improvement of a BERT-class
+    encoder, derived in ONE gradient pass (seconds), with the achieved
+    factor and the ranked order in which parameters must improve.
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import emit, save_json
+from repro.core import optimize
+from repro.core.dopt import derive_tech_targets
+from repro.workloads import WORKLOAD_FAMILIES, get_workload
+
+
+def run(quick: bool = False) -> dict:
+    out = {"table3": {}, "targets_100x": None}
+    steps = 10 if quick else 25
+    for family, names in WORKLOAD_FAMILIES.items():
+        if family == "non_ai":
+            continue
+        graphs = [get_workload(n) for n in (names[:1] if quick else names)]
+        for objective in ("time", "energy"):
+            res = optimize(graphs, opt_over="tech", objective=objective,
+                           steps=steps, lr=0.05)
+            top = [n for n, _ in res.importance[:5]]
+            out["table3"][f"{family}/{objective}"] = top
+            emit("tech_targets", dict(family=family, objective=objective,
+                                      order=" > ".join(top[:4])))
+
+    # 100x EDP derivation for BERT (paper Fig. 3)
+    t0 = time.perf_counter()
+    tt = derive_tech_targets(get_workload("bert_base"), goal_factor=100.0,
+                             objective="edp", steps=80 if quick else 400, lr=0.12)
+    wall = time.perf_counter() - t0
+    moved = sorted(tt["targets"].items(), key=lambda kv: -abs(kv[1]["factor"] - 1))
+    top_moves = {k: round(v["factor"], 2) for k, v in moved[:6]}
+    out["targets_100x"] = dict(achieved=round(tt["achieved_factor"], 1),
+                               epochs=tt["epochs"], wall_s=round(wall, 1),
+                               top_targets=top_moves,
+                               importance=[n for n, _ in tt["importance"][:8]])
+    emit("tech_targets", dict(goal="100x_edp_bert", achieved=out["targets_100x"]["achieved"],
+                              epochs=tt["epochs"], wall_s=round(wall, 1)))
+    emit("tech_targets", dict(top_targets=str(top_moves)))
+    if tt["achieved_factor"] < 100.0:
+        # pure-technology improvement saturates at the library's physical
+        # bounds (~86x); the paper's 100x needs the architecture co-designed
+        # (its framework does both) — report the joint path too
+        res = optimize(get_workload("bert_base"), opt_over="both", objective="edp",
+                       steps=30 if quick else 80, lr=0.1, target_factor=100.0)
+        joint = res.history["edp"][0] / max(res.history["edp"][-1], 1e-300)
+        out["targets_100x"]["joint_arch_tech_achieved"] = round(joint, 1)
+        emit("tech_targets", dict(goal="100x_edp_bert_joint", achieved=round(joint, 1),
+                                  epochs=len(res.history["edp"])))
+    save_json("tech_targets", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

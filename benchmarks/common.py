@@ -1,0 +1,31 @@
+"""Shared helpers for the benchmark harness."""
+from __future__ import annotations
+
+import json
+import os
+import time
+from contextlib import contextmanager
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results")
+
+
+def emit(table: str, row: dict):
+    """One CSV-ish line per result: table,key=value,..."""
+    parts = [f"{k}={v}" for k, v in row.items()]
+    print(f"[bench:{table}] " + " ".join(parts), flush=True)
+
+
+def save_json(name: str, obj):
+    os.makedirs(os.path.join(RESULTS_DIR, "bench"), exist_ok=True)
+    path = os.path.join(RESULTS_DIR, "bench", name + ".json")
+    with open(path, "w") as f:
+        json.dump(obj, f, indent=1, default=float)
+    return path
+
+
+@contextmanager
+def timer():
+    t = {}
+    t0 = time.perf_counter()
+    yield t
+    t["s"] = time.perf_counter() - t0

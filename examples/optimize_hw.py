@@ -1,0 +1,50 @@
+"""DRAGON applied to the assigned LM fleet: derive technology targets and an
+accelerator design for serving qwen2.5-32b, and compare architectures'
+hardware pressure (which arch wants which technology).
+
+  PYTHONPATH=src python examples/optimize_hw.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.core import ArchParams, TechParams, optimize, simulate
+from repro.core.dopt import derive_tech_targets
+from repro.workloads import lm_cell
+
+
+def main():
+    # 1. what does DECODE-serving qwen2.5-32b want from hardware? -----------
+    g_decode = lm_cell("qwen2.5-32b", "decode_32k")
+    res = optimize(g_decode, objective="time", opt_over="tech", steps=30, lr=0.08)
+    print("qwen2.5-32b decode — top technology levers (objective: time):")
+    for name, elast in res.importance[:5]:
+        print(f"   {name:42s} |elasticity| {elast:.3f}")
+
+    # 2. derive an accelerator design for the same cell ----------------------
+    res2 = optimize(g_decode, objective="edp", opt_over="arch", steps=40, lr=0.1)
+    a = res2.arch
+    print(f"\nderived accelerator: systolic {float(a.sys_arr_x):.0f}x"
+          f"{float(a.sys_arr_y):.0f}x{float(a.sys_arr_n):.0f}, "
+          f"gbuf {float(a.capacity[1])/2**20:.0f} MB, "
+          f"{float(a.frequency)/1e9:.2f} GHz "
+          f"(EDP {res2.history['edp'][0]/res2.history['edp'][-1]:.0f}x better)")
+
+    # 3. compare hardware pressure across architecture families --------------
+    print("\nper-family #1 technology lever (train_4k):")
+    for arch in ("granite-3-8b", "kimi-k2-1t-a32b", "falcon-mamba-7b"):
+        g = lm_cell(arch, "train_4k")
+        r = optimize(g, objective="time", opt_over="tech", steps=12, lr=0.08)
+        print(f"   {arch:24s} -> {r.importance[0][0]}")
+
+    # 4. paper Fig. 3: technology targets for 10x EDP on the decode cell -----
+    tt = derive_tech_targets(g_decode, goal_factor=10.0, steps=80, lr=0.12)
+    print(f"\n10x-EDP technology targets derived in {tt['epochs']} epochs "
+          f"(achieved {tt['achieved_factor']:.1f}x):")
+    moved = sorted(tt["targets"].items(), key=lambda kv: -abs(kv[1]["factor"] - 1))
+    for name, t in moved[:5]:
+        print(f"   {name:42s} improve {t['factor']:.1f}x")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Quickstart: DRAGON in 60 seconds.
+
+Simulate a BERT-class workload on a TPU-v1-flavoured accelerator, look at
+where the time/energy goes, then let DOpt improve the design's EDP and
+derive which *technology* parameters matter most.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+import jax
+
+from repro.core import ArchParams, TechParams, optimize, simulate
+from repro.workloads import get_workload
+
+
+def main():
+    # 1. a workload is a dataflow graph ------------------------------------
+    g = get_workload("bert_base")
+    print(f"workload: bert_base — {g.n_vertices} vertices, "
+          f"{float(g.total_flops)/1e9:.1f} GFLOPs")
+
+    # 2. DSim: simulate it on the default accelerator ----------------------
+    tech, arch = TechParams.default(), ArchParams.default()
+    perf = simulate(tech, arch, g)
+    print(f"baseline : runtime {float(perf.runtime)*1e3:8.2f} ms   "
+          f"energy {float(perf.energy)*1e3:8.2f} mJ   "
+          f"area {float(perf.area):6.1f} mm^2   EDP {float(perf.edp):.3e}")
+
+    # 3. the WHOLE simulator is differentiable ------------------------------
+    grads = jax.grad(lambda t: simulate(t, arch, g).edp)(tech)
+    print(f"d EDP / d DRAM-cell-latency = {float(grads.cell_read_latency[2]):.3e}"
+          "  <- gradients through the mapping itself")
+
+    # 4. DOpt: gradient-descend the design (arch + technology jointly) ------
+    res = optimize(g, objective="edp", steps=40, lr=0.1)
+    final = simulate(res.tech, res.arch, g)
+    print(f"optimized: runtime {float(final.runtime)*1e3:8.2f} ms   "
+          f"energy {float(final.energy)*1e3:8.2f} mJ   "
+          f"EDP {float(final.edp):.3e}  "
+          f"({float(perf.edp)/float(final.edp):.0f}x better)")
+    print("top technology levers:",
+          " > ".join(n for n, _ in res.importance[:4]))
+
+
+if __name__ == "__main__":
+    main()

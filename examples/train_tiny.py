@@ -1,0 +1,58 @@
+"""End-to-end training driver: a ~100M-param dense LM trained for a few
+hundred steps on CPU with the full production stack — sharded data pipeline,
+AdamW (+schedule), remat, checkpointing, straggler monitor — exactly the
+code path launch/train.py uses on a pod.
+
+  PYTHONPATH=src python examples/train_tiny.py [--steps 300]
+"""
+import argparse
+import dataclasses
+import sys
+import tempfile
+
+sys.path.insert(0, "src")
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.launch.mesh import make_local_mesh
+from repro.models.model import build_model
+from repro.optim import AdamWConfig, warmup_cosine
+from repro.train import TrainConfig, Trainer, TrainerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    args = ap.parse_args()
+
+    # ~100M params: 8L x 768d x 12H, 32k vocab (GPT-2-small-class)
+    cfg = ModelConfig(
+        name="tiny-100m", family="dense", n_layers=8, d_model=768, n_heads=12,
+        n_kv_heads=12, d_ff=3072, vocab_size=32768, mlp_type="swiglu",
+        remat="none", fsdp=False, use_flash=False, dtype="float32",
+    )
+    model = build_model(cfg)
+    print(f"model: {model.param_count()/1e6:.1f}M params")
+
+    shape = ShapeConfig("train_tiny", args.seq, args.batch, "train")
+    mesh = make_local_mesh()
+    with tempfile.TemporaryDirectory() as ckpt_dir, mesh:
+        trainer = Trainer(
+            model, shape,
+            AdamWConfig(lr=6e-4, schedule=warmup_cosine(50, args.steps)),
+            TrainConfig(microbatches=1),
+            TrainerConfig(steps=args.steps, ckpt_every=100, ckpt_dir=ckpt_dir,
+                          log_every=20),
+            mesh=mesh,
+        )
+        out = trainer.run()
+    first, last = out["losses"][0], out["losses"][-1]
+    print(f"\nloss {first:.3f} -> {last:.3f} over {args.steps} steps "
+          f"({out['wall']:.0f}s); structure of the synthetic stream was learned"
+          if last < first else "loss did not improve — investigate!")
+    assert last < first - 0.5, (first, last)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,297 @@
+"""DGen — the hardware model generator (paper §5.1).
+
+Derives a differentiable hardware model H from
+  * an architectural specification (ArchSpec: which units, which memory tech),
+  * the device performance-model library (per memory technology, per logic
+    primitive), and
+  * the accelerator template library (systolicArray / vector / macTree / fpu).
+
+H(unit, metric) in the paper is an algebraic expression; here it is a JAX
+function of (TechParams, ArchParams).  ``specialize`` applies concrete
+parameter assignments and returns a ConcreteHW pytree of metric values —
+the paper's CH — which DSim and the mapper consume.  Everything is
+differentiable w.r.t. both parameter sets.
+
+Device models are CACTI-flavoured closed forms anchored at a 40 nm
+reference (paper Alg. 6 uses reference tables at 40 nm).  They are
+performance *models*, not SPICE: smooth, monotone, plausibly scaled.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.params import (
+    COMP_CLS,
+    MEM_CLS,
+    MEM_TYPES,
+    N_COMP,
+    N_MEM,
+    ArchParams,
+    ArchSpec,
+    TechParams,
+)
+
+# --------------------------------------------------------------------------- #
+# Device library constants (reference @ 40nm), per memory technology
+# order: (sram, rram, dram)
+# --------------------------------------------------------------------------- #
+
+_WRITE_LAT_MULT = np.array([1.0, 3.0, 1.2], np.float32)
+_WRITE_EN_MULT = np.array([1.0, 8.0, 1.1], np.float32)
+_PERIPH_DELAY_REF = np.array([0.25e-9, 0.35e-9, 2.0e-9], np.float32)  # s @40nm
+_PERIPH_OVERHEAD = np.array([0.35, 0.25, 0.15], np.float32)  # area overhead frac
+_LEAK_PERIPH_REF = np.array([2.0e-3, 1.5e-3, 0.5e-3], np.float32)  # W/mm^2 @40nm
+_VDD = 0.9  # volts, fixed; node-dependence folded into energy refs
+
+# logic primitive reference values @40nm: (adder, mult, ff)
+_PRIM_DELAY = np.array([0.15e-9, 0.60e-9, 0.05e-9], np.float32)  # s
+_PRIM_ENERGY = np.array([0.03e-12, 0.80e-12, 0.01e-12], np.float32)  # J
+_PRIM_AREA = np.array([60.0, 800.0, 10.0], np.float32)  # um^2
+_LEAK_LOGIC_REF = 4.0e-3  # W/mm^2 @40nm
+
+
+@jax.tree_util.register_dataclass
+@dataclass
+class ConcreteHW:
+    """The concrete hardware model CH (paper §3): every metric resolved to a
+    real value.  Mem arrays are [N_MEM], comp arrays are [N_COMP]."""
+
+    # memory metrics
+    read_latency: jax.Array  # s
+    write_latency: jax.Array  # s
+    read_energy_pb: jax.Array  # J / byte
+    write_energy_pb: jax.Array  # J / byte
+    mem_leakage: jax.Array  # W
+    mem_area: jax.Array  # mm^2
+    mem_bw: jax.Array  # bytes / s
+    capacity: jax.Array  # bytes
+    # compute metrics
+    flops_per_cycle: jax.Array  # FLOP / cycle per compute class
+    energy_per_flop: jax.Array  # J / FLOP
+    comp_leakage: jax.Array  # W
+    comp_area: jax.Array  # mm^2
+    # utilization-model unit dims (systolic rows/cols; lane width)
+    sys_x: jax.Array
+    sys_y: jax.Array
+    vect_width: jax.Array
+    # SoC
+    frequency: jax.Array  # Hz (effective, timing-feasible)
+
+    @property
+    def total_area(self) -> jax.Array:
+        return jnp.sum(self.mem_area) + jnp.sum(self.comp_area)
+
+    @property
+    def total_leakage(self) -> jax.Array:
+        return jnp.sum(self.mem_leakage) + jnp.sum(self.comp_leakage)
+
+
+# --------------------------------------------------------------------------- #
+# Memory device models: memLib : MemTypes x MemMetrics -> Exprs  (paper §5.1)
+# --------------------------------------------------------------------------- #
+
+
+def _mem_metrics(
+    tech: TechParams, arch: ArchParams, type_w: jax.Array, local_ports_scale: jax.Array
+) -> dict:
+    """Memory metrics for all N_MEM units.
+
+    ``type_w``: [N_MEM, 3] technology-selection weights per memory unit
+    (one-hot for a concrete ArchSpec; soft for DOpt2's differentiable
+    technology selection).
+    ``local_ports_scale``: localMem (register files / PE scratchpads) is
+    *distributed* — aggregate bandwidth scales with the number of PEs.
+    """
+    bits = arch.capacity * 8.0
+    bank_bits = arch.bank_size * 8.0
+    n_banks = jnp.maximum(bits / bank_bits, 1.0)
+
+    # geometry: square bank, side in um
+    side = jnp.sqrt(bank_bits * tech.cell_area)
+    global_wire = jnp.sqrt(n_banks) * side  # routing across the bank grid
+
+    # distributed RC (fF/um * ohm/um * um^2 -> s; 1e-15 from fF)
+    rc_bank = 0.5 * tech.mem_wire_resist * tech.mem_wire_cap * 1e-15 * side**2
+    rc_global = 0.5 * tech.mem_wire_resist * tech.mem_wire_cap * 1e-15 * global_wire**2
+
+    periph_delay = (type_w @ _PERIPH_DELAY_REF) * (tech.peripheral_node / 40.0)
+    cell_lat = tech.cell_read_latency / jnp.maximum(tech.cell_access_device, 1e-3)
+
+    read_latency = cell_lat + rc_bank + rc_global + periph_delay
+    write_latency = read_latency * (type_w @ _WRITE_LAT_MULT)
+
+    # energy per byte: cell read + wire charge (8 bits/byte)
+    wire_e_bit = tech.mem_wire_cap * (side + global_wire) * 1e-15 * _VDD**2
+    cell_e_bit = tech.cell_read_power * 1e-12
+    read_energy_pb = 8.0 * (cell_e_bit + wire_e_bit)
+    write_energy_pb = read_energy_pb * (type_w @ _WRITE_EN_MULT)
+
+    # area: cells + peripheral overhead (smaller peripheral node -> less overhead)
+    overhead = (type_w @ _PERIPH_OVERHEAD) * (tech.peripheral_node / 40.0)
+    mem_area = bits * tech.cell_area * 1e-6 * (1.0 + overhead)  # mm^2
+
+    # leakage: cells + peripheral logic
+    leak_cells = tech.cell_leakage_power * 1e-9 * bits
+    leak_periph = (type_w @ _LEAK_PERIPH_REF) * mem_area * overhead * jnp.sqrt(40.0 / tech.peripheral_node)
+    mem_leakage = leak_cells + leak_periph
+
+    # bandwidth: each port streams one bank row per access; localMem ports
+    # replicate with the PE fabric (one port per 8 MACs)
+    row_bytes = jnp.sqrt(bank_bits) / 8.0
+    port_scale = jnp.ones(N_MEM).at[0].set(local_ports_scale)
+    mem_bw = arch.n_read_ports * port_scale * row_bytes / read_latency
+
+    return dict(
+        read_latency=read_latency,
+        write_latency=write_latency,
+        read_energy_pb=read_energy_pb,
+        write_energy_pb=write_energy_pb,
+        mem_leakage=mem_leakage,
+        mem_area=mem_area,
+        mem_bw=mem_bw,
+        capacity=arch.capacity,
+    )
+
+
+# --------------------------------------------------------------------------- #
+# Logic primitive models: primLib : PrimitiveType x CompMetrics -> XExprs
+# --------------------------------------------------------------------------- #
+
+
+def _prim(tech_node: jax.Array, which: int) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """(delay s, energy J, area um^2) for primitive ``which`` at ``node`` nm.
+
+    Delay scales ~linearly with node, energy/area ~quadratically (classic
+    Dennard-flavoured scaling; adequate for a differentiable target model).
+    """
+    s = tech_node / 40.0
+    return _PRIM_DELAY[which] * s, _PRIM_ENERGY[which] * s**2, _PRIM_AREA[which] * s**2
+
+
+# --------------------------------------------------------------------------- #
+# Accelerator template library: accTempls (paper §5.1)
+# --------------------------------------------------------------------------- #
+
+
+def _comp_metrics(tech: TechParams, arch: ArchParams) -> dict:
+    node = tech.node  # [N_COMP]
+    add_d, add_e, add_a = _prim(node, 0)
+    mul_d, mul_e, mul_a = _prim(node, 1)
+    ff_d, ff_e, ff_a = _prim(node, 2)
+
+    # wire adder per PE: RC over the PE's own extent
+    pe_side = jnp.sqrt(mul_a + add_a + 3 * ff_a)  # um
+    wire_d = 0.5 * tech.comp_wire_resist * tech.comp_wire_cap * 1e-15 * pe_side**2
+    wire_e = tech.comp_wire_cap * pe_side * 1e-15 * _VDD**2
+
+    # per-class unit counts and per-MAC composition
+    sys_macs = arch.sys_arr_x * arch.sys_arr_y * arch.sys_arr_n
+    vect_macs = arch.vect_width * arch.vect_n
+    mtree_macs = arch.mtree_x * arch.mtree_y * arch.mtree_tile_x * arch.mtree_tile_y
+    fpu_macs = arch.fpu_n
+
+    macs = jnp.stack([sys_macs, vect_macs, mtree_macs, fpu_macs])
+    flops_per_cycle = 2.0 * macs  # 1 MAC = 2 FLOPs
+
+    # cycle-limiting path per class: systolic PE is mult+ff (pipelined),
+    # vector lane mult+add (FMA), mac tree mult + log-depth adder stage,
+    # fpu a slower multi-stage unit (modelled 2x mult path)
+    tree_depth = jnp.log2(jnp.maximum(arch.mtree_x, 2.0))
+    crit = jnp.stack(
+        [
+            mul_d[0] + ff_d[0] + wire_d[0],
+            mul_d[1] + add_d[1] + wire_d[1],
+            mul_d[2] + add_d[2] * 1.0 + wire_d[2] * tree_depth,
+            2.0 * (mul_d[3] + add_d[3]),
+        ]
+    )
+
+    # energy per MAC (J): mult + add + pipeline regs + wires
+    e_mac = jnp.stack(
+        [
+            mul_e[0] + add_e[0] + 3 * ff_e[0] + wire_e[0],
+            mul_e[1] + add_e[1] + 2 * ff_e[1] + wire_e[1],
+            mul_e[2] + add_e[2] + ff_e[2] + wire_e[2],
+            2.0 * (mul_e[3] + add_e[3]) + 4 * ff_e[3],
+        ]
+    )
+    energy_per_flop = e_mac / 2.0
+
+    # area mm^2: PEs + 20% routing/control overhead
+    a_mac = jnp.stack(
+        [
+            mul_a[0] + add_a[0] + 3 * ff_a[0],
+            mul_a[1] + add_a[1] + 2 * ff_a[1],
+            mul_a[2] + add_a[2] + ff_a[2],
+            4.0 * (mul_a[3] + add_a[3]),
+        ]
+    )
+    comp_area = macs * a_mac * 1e-6 * 1.2
+
+    # leakage: per-area density improves (shrinks) slowly with node
+    comp_leakage = _LEAK_LOGIC_REF * comp_area * jnp.sqrt(40.0 / node)
+
+    return dict(
+        flops_per_cycle=flops_per_cycle,
+        energy_per_flop=energy_per_flop,
+        comp_leakage=comp_leakage,
+        comp_area=comp_area,
+        crit_path=crit,
+    )
+
+
+# --------------------------------------------------------------------------- #
+# specialize: H x TA x AA -> CH  (paper §3)
+# --------------------------------------------------------------------------- #
+
+
+def specialize(
+    tech: TechParams,
+    arch: ArchParams,
+    spec: ArchSpec = ArchSpec(),
+    type_weights: jax.Array | None = None,
+) -> ConcreteHW:
+    """Evaluate the hardware model into a concrete metrics pytree.
+
+    ``type_weights`` overrides the spec's hard memory-technology selection
+    with soft weights [N_MEM, 3] (used by DOpt2's differentiable technology
+    search); default is the one-hot encoding of ``spec.mem_type``.
+    """
+    if type_weights is None:
+        tw = jax.nn.one_hot(jnp.asarray(spec.mem_type_idx()), len(MEM_TYPES), dtype=jnp.float32)
+    else:
+        tw = type_weights
+
+    comp = _comp_metrics(tech, arch)
+    total_macs = jnp.sum(comp["flops_per_cycle"]) / 2.0
+    mem = _mem_metrics(tech, arch, tw, jnp.maximum(total_macs / 8.0, 1.0))
+
+    mem_mask = jnp.asarray(spec.mem_mask())
+    comp_mask = jnp.asarray(spec.comp_mask())
+
+    # timing feasibility: the SoC clock cannot beat the slowest critical path
+    f_max = 1.0 / jnp.max(jnp.where(comp_mask > 0, comp["crit_path"], 0.0))
+    frequency = jnp.minimum(arch.frequency, f_max)
+
+    return ConcreteHW(
+        read_latency=mem["read_latency"],
+        write_latency=mem["write_latency"],
+        read_energy_pb=mem["read_energy_pb"],
+        write_energy_pb=mem["write_energy_pb"],
+        mem_leakage=mem["mem_leakage"] * mem_mask,
+        mem_area=mem["mem_area"] * mem_mask,
+        mem_bw=mem["mem_bw"],
+        capacity=mem["capacity"],
+        flops_per_cycle=comp["flops_per_cycle"] * comp_mask,
+        energy_per_flop=comp["energy_per_flop"],
+        comp_leakage=comp["comp_leakage"] * comp_mask,
+        comp_area=comp["comp_area"] * comp_mask,
+        sys_x=arch.sys_arr_x,
+        sys_y=arch.sys_arr_y,
+        vect_width=arch.vect_width,
+        frequency=frequency,
+    )

@@ -1,0 +1,106 @@
+"""DSim — the hardware simulator (paper §5.3/§6).
+
+simulate(): (TechParams, ArchParams, Graph) -> PerfEstimate
+  Runtime = cycles / frequency                         (paper eq. 1)
+  Energy  = Σ_mem reads·re + writes·we + leak·Runtime
+          + Σ_comp ops·e_op + leak·Runtime             (paper §5.3)
+  Area    = Σ areas                                    (paper eq. 2)
+  Power   = Energy / Runtime                           (paper eq. 3)
+
+Fully differentiable w.r.t. both parameter sets; jit/vmap/pjit-able.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dgen import ConcreteHW, specialize
+from repro.core.graph import Graph, workload_optimize
+from repro.core.mapper import MapperCfg, MapState, map_workload
+from repro.core.params import ArchParams, ArchSpec, TechParams
+
+
+@jax.tree_util.register_dataclass
+@dataclass
+class PerfEstimate:
+    """paper §5: P : Measurements -> R+  (+ useful breakdowns)."""
+
+    runtime: jax.Array  # s
+    energy: jax.Array  # J
+    power: jax.Array  # W
+    area: jax.Array  # mm^2
+    cycles: jax.Array
+    edp: jax.Array  # J*s
+    energy_mem: jax.Array
+    energy_comp: jax.Array
+    energy_leak: jax.Array
+    state: MapState
+
+    def measurements(self) -> dict:
+        return dict(runtime=self.runtime, energy=self.energy, power=self.power, area=self.area)
+
+
+def _energy(chw: ConcreteHW, ms: MapState, runtime: jax.Array):
+    e_mem_dyn = jnp.sum(ms.reads * chw.read_energy_pb + ms.writes * chw.write_energy_pb)
+    e_comp_dyn = jnp.sum(ms.comp_ops * chw.energy_per_flop)
+    e_leak = (jnp.sum(chw.mem_leakage) + jnp.sum(chw.comp_leakage)) * runtime
+    return e_mem_dyn, e_comp_dyn, e_leak
+
+
+def simulate_chw(chw: ConcreteHW, g: Graph, mcfg: MapperCfg = MapperCfg()) -> PerfEstimate:
+    ms = map_workload(chw, g, mcfg)
+    runtime = ms.cycles / chw.frequency
+    e_mem, e_comp, e_leak = _energy(chw, ms, runtime)
+    energy = e_mem + e_comp + e_leak
+    area = chw.total_area
+    return PerfEstimate(
+        runtime=runtime,
+        energy=energy,
+        power=energy / jnp.maximum(runtime, 1e-30),
+        area=area,
+        cycles=ms.cycles,
+        edp=energy * runtime,
+        energy_mem=e_mem,
+        energy_comp=e_comp,
+        energy_leak=e_leak,
+        state=ms,
+    )
+
+
+def simulate(
+    tech: TechParams,
+    arch: ArchParams,
+    g: Graph,
+    spec: ArchSpec = ArchSpec(),
+    mcfg: MapperCfg = MapperCfg(),
+    type_weights: jax.Array | None = None,
+) -> PerfEstimate:
+    """End-to-end differentiable: params -> CH -> mapping -> estimates."""
+    chw = specialize(tech, arch, spec, type_weights)
+    return simulate_chw(chw, g, mcfg)
+
+
+@partial(jax.jit, static_argnames=("spec", "mcfg"))
+def simulate_jit(tech, arch, g, spec: ArchSpec = ArchSpec(), mcfg: MapperCfg = MapperCfg()):
+    return simulate(tech, arch, g, spec, mcfg)
+
+
+def objective_value(perf: PerfEstimate, objective: str, area_constraint: float | None = None) -> jax.Array:
+    """Scalar optimization objective (paper §7 / Appendix C).
+
+    area-constrained form: F = T * e^(a - A)  (paper §11.3), smooth-rectified
+    so the penalty only binds above the constraint.
+    """
+    base = {
+        "time": perf.runtime,
+        "energy": perf.energy,
+        "edp": perf.edp,
+        "power": perf.power,
+        "area": perf.area,
+    }[objective]
+    if area_constraint is not None:
+        base = base * jnp.exp(jax.nn.softplus((perf.area - area_constraint) / area_constraint))
+    return base

@@ -1,0 +1,203 @@
+"""The differentiable mapper (paper §5.2, Algorithms 1/2/7).
+
+Maps a workload DFG onto a concrete hardware model CH and produces cycle
+counts plus the memory/compute state the energy model consumes.
+
+JAX adaptation of the paper's control flow (see DESIGN.md §3):
+
+  * MAPVERTEX's vertex *splitting* when the working set exceeds memory
+    capacity (Alg. 1 lines 20-23) becomes *continuous tiling*:
+    ``n_tiles = ceil(alloc / 0.9*capacity)`` with a straight-through ceil —
+    the forward value matches the discrete split count exactly, while the
+    backward pass sees a smooth surrogate so capacity gradients exist.
+
+  * PREFETCHVERTEX / Alg. 7's prefetch & streaming decisions
+    (bw_util < 0.9 * bw_limit, size_util < 0.9 * size_limit) become hard
+    gates forward + sigmoid surrogate gradients.
+
+  * Appendix C stall-time gradients: ``t = max(t_mem, t_comp)`` — the
+    subgradient of max flows only through the critical (non-hidden) term,
+    exactly the paper's 'gradient is zero if latency is entirely hidden'.
+
+The mapper is a single ``lax.scan`` over vertices; it is jit-able, grad-able
+and vmap-able (population DSE).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dgen import ConcreteHW
+from repro.core.graph import Graph
+from repro.core.params import COMP_IDX, MEM_IDX, N_COMP, N_MEM
+
+_GBUF = MEM_IDX["globalBuf"]
+_MAIN = MEM_IDX["mainMem"]
+_LOCAL = MEM_IDX["localMem"]
+_SYS = COMP_IDX["systolicArray"]
+_VEC = COMP_IDX["vector"]
+
+
+# --------------------------------------------------------------------------- #
+# straight-through helpers
+# --------------------------------------------------------------------------- #
+
+
+def ste(hard: jax.Array, soft: jax.Array) -> jax.Array:
+    """Forward = hard (exact discrete semantics); backward = d soft."""
+    return soft + jax.lax.stop_gradient(hard - soft)
+
+
+def ceil_ste(x: jax.Array) -> jax.Array:
+    return ste(jnp.ceil(x), x)
+
+
+def gate_below_ste(x: jax.Array, thresh: jax.Array, tau: float = 0.1) -> jax.Array:
+    """1.0 when x < thresh (hard forward), sigmoid surrogate backward."""
+    hard = (x < thresh).astype(jnp.float32)
+    soft = jax.nn.sigmoid((thresh - x) / (tau * jnp.abs(thresh) + 1e-30))
+    return ste(hard, soft)
+
+
+# --------------------------------------------------------------------------- #
+# Mapper config + state
+# --------------------------------------------------------------------------- #
+
+
+@dataclass(frozen=True)
+class MapperCfg:
+    headroom: float = 0.9  # paper Alg. 7 thresholds
+    prefetch: bool = True
+    streaming: bool = True
+    merge_threshold: float = 0.0  # compute-merge pass threshold (FLOPs)
+
+
+@jax.tree_util.register_dataclass
+@dataclass
+class MapState:
+    """paper ⟨z, ms, cs⟩: cycle count + memory state + compute state."""
+
+    cycles: jax.Array
+    reads: jax.Array  # [N_MEM] total bytes read
+    writes: jax.Array  # [N_MEM] total bytes written
+    comp_ops: jax.Array  # [N_COMP] total FLOPs issued
+    peak_alloc: jax.Array  # [N_MEM] peak working set
+    t_comp: jax.Array  # total compute-critical seconds (diagnostic)
+    t_mem: jax.Array  # total memory-critical seconds (diagnostic)
+    t_exposed_main: jax.Array  # main-memory time not hidden by prefetch
+    bw_util: jax.Array  # [N_MEM] average bandwidth utilization
+    n_tiles: jax.Array  # total vertex splits (diagnostic)
+
+
+def map_workload(chw: ConcreteHW, g: Graph, cfg: MapperCfg = MapperCfg()) -> MapState:
+    """MAPWORKLOAD (paper Alg. 1): scan the (topologically ordered) vertex
+    list, tiling / streaming / prefetching per vertex."""
+
+    freq = chw.frequency
+    cap_gbuf = chw.capacity[_GBUF] * cfg.headroom
+    bw = chw.mem_bw  # [N_MEM] bytes/s
+
+    def vertex_step(carry, v):
+        n_comp, n_read, n_write, n_alloc, dims = v
+        # ---------------- tiling (MAPVERTEX split, lines 20-23) -------------
+        alloc_gbuf = n_alloc[_GBUF]
+        tiles = jnp.maximum(ceil_ste(alloc_gbuf / cap_gbuf), 1.0)
+
+        # ---------------- compute time per class ---------------------------
+        # systolic array: discrete wave model (matches the cycle-walker's
+        # semantics, differentiable through STE-ceil): each (sys_x x sys_y)
+        # output tile streams K MACs + a fill/drain bubble of sx+sy cycles
+        M, N, K = dims[0], dims[1], dims[2]
+        m_t = jnp.maximum(M / tiles, 1.0)
+        waves_m = ceil_ste(m_t / chw.sys_x)
+        waves_n = ceil_ste(jnp.maximum(N, 1.0) / chw.sys_y)
+        k_cycles = ceil_ste(jnp.maximum(K, 1.0))
+        fill = chw.sys_x + chw.sys_y
+        cyc_sys_tile = waves_m * waves_n * (k_cycles + fill)
+        ops_sys_tile = n_comp[_SYS] / tiles
+        cyc_sys_tile = jnp.maximum(
+            cyc_sys_tile, ops_sys_tile / jnp.maximum(chw.flops_per_cycle[_SYS], 1e-9)
+        )
+        t_sys = jnp.where(ops_sys_tile > 0, tiles * cyc_sys_tile / freq, 0.0)
+        # other classes: rate model
+        eff_rate = jnp.maximum(chw.flops_per_cycle, 1e-9) * freq  # FLOP/s
+        t_comp_cls = n_comp / eff_rate
+        t_comp = jnp.maximum(jnp.max(t_comp_cls.at[_SYS].set(0.0)), t_sys)
+
+        # ---------------- memory time per level ----------------------------
+        # burst-quantized transfers with the average bank-conflict factor of
+        # the reference walker (mean of its 1.00-1.08 hash-spread) + per-tile
+        # access latency
+        conflict = 1.04
+        t_lvl = (n_read + n_write) / bw * conflict
+        t_tile_lat = tiles * (chw.read_latency + chw.write_latency)
+        t_onchip = jnp.maximum(t_lvl[_GBUF] + t_tile_lat[_GBUF], t_lvl[_LOCAL])
+        t_main = t_lvl[_MAIN] + t_tile_lat[_MAIN] * (n_alloc[_MAIN] > 0)
+
+        # ---------------- prefetch / streaming gates (Alg. 7) --------------
+        occupancy, bw_ema = carry["occupancy"], carry["bw_ema"]
+        can_prefetch = (
+            gate_below_ste(occupancy + alloc_gbuf / tiles, chw.capacity[_GBUF] * cfg.headroom)
+            * gate_below_ste(bw_ema, cfg.headroom)
+            * (1.0 if cfg.prefetch else 0.0)
+        )
+        # streaming: if over capacity but bw available, overlap main-mem
+        # traffic with compute (set_execution = streaming)
+        can_stream = gate_below_ste(bw_ema, cfg.headroom) * (1.0 if cfg.streaming else 0.0)
+        hide = jnp.maximum(can_prefetch, can_stream)
+
+        # exposed main-memory time: hidden behind compute when gated on
+        t_core = jnp.maximum(t_comp, t_onchip)
+        t_main_exposed = jnp.maximum(t_main - hide * t_core, 0.0)
+        # integer-cycle quantization per tile (cycle-walker semantics, exact
+        # forward via STE): decode-scale vertices cost whole cycles
+        per_tile_cyc = (t_core + t_main_exposed) * freq / tiles
+        t_vertex = tiles * ceil_ste(per_tile_cyc) / freq
+
+        # ---------------- state updates -------------------------------------
+        used_bw = jnp.where(
+            t_vertex > 0, (n_read[_GBUF] + n_write[_GBUF]) / jnp.maximum(t_vertex, 1e-30) / bw[_GBUF], 0.0
+        )
+        new_bw = 0.8 * bw_ema + 0.2 * jnp.clip(used_bw, 0.0, 2.0)
+        new_occ = 0.5 * occupancy + alloc_gbuf  # decaying residency
+        new_occ = jnp.minimum(new_occ, chw.capacity[_GBUF])
+
+        out = dict(
+            cycles=t_vertex * freq,
+            t_comp=t_comp,
+            t_mem=t_onchip,
+            t_main_exposed=t_main_exposed,
+            tiles=tiles,
+            reads=n_read,
+            writes=n_write,
+            comp=n_comp,
+            alloc=n_alloc,
+            bw_now=used_bw,
+        )
+        return dict(occupancy=new_occ, bw_ema=new_bw), out
+
+    carry0 = dict(occupancy=jnp.float32(0.0), bw_ema=jnp.float32(0.0))
+    xs = (g.n_comp, g.n_read, g.n_write, g.n_alloc, g.dims)
+    _, outs = jax.lax.scan(vertex_step, carry0, xs)
+
+    total_t = jnp.sum(outs["cycles"]) / freq
+    return MapState(
+        cycles=jnp.sum(outs["cycles"]),
+        reads=jnp.sum(outs["reads"], 0),
+        writes=jnp.sum(outs["writes"], 0),
+        comp_ops=jnp.sum(outs["comp"], 0),
+        peak_alloc=jnp.max(outs["alloc"], 0),
+        t_comp=jnp.sum(outs["t_comp"]),
+        t_mem=jnp.sum(outs["t_mem"]),
+        t_exposed_main=jnp.sum(outs["t_main_exposed"]),
+        bw_util=jnp.stack(
+            [
+                jnp.float32(0.0),
+                jnp.sum(outs["bw_now"] * outs["cycles"]) / jnp.maximum(jnp.sum(outs["cycles"]), 1e-30),
+                jnp.float32(0.0),
+            ]
+        ),
+        n_tiles=jnp.sum(outs["tiles"]),
+    )

@@ -1,0 +1,203 @@
+"""DRAGON parameter spaces (paper Table 2).
+
+TechParams  — technology parameters (MemTechPars + CompTechPars)
+ArchParams  — architectural parameters (MemArchPars + CompArchPars)
+
+Both are registered JAX pytrees of positive float arrays so the whole
+simulator is differentiable w.r.t. them.  Integer-valued parameters
+(node, capacities, array dims, ...) are carried as floats and rounded
+straight-through at the point of use (see mapper.py / dgen.py), which is
+the JAX adaptation of the paper's Z-valued parameters.
+
+Unit conventions (kept consistent across dgen/dsim):
+  time    seconds        energy  joules        power  watts
+  area    mm^2           length  micrometers   bytes  bytes
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Class universes (paper §3)
+MEM_CLS = ("localMem", "globalBuf", "mainMem")
+COMP_CLS = ("systolicArray", "vector", "macTree", "fpu")
+MEM_TYPES = ("sram", "rram", "dram")
+PRIMITIVES = ("adder", "mult", "ff")
+
+N_MEM = len(MEM_CLS)
+N_COMP = len(COMP_CLS)
+
+MEM_IDX = {m: i for i, m in enumerate(MEM_CLS)}
+COMP_IDX = {c: i for i, c in enumerate(COMP_CLS)}
+
+
+def _f(x) -> jax.Array:
+    return jnp.asarray(x, dtype=jnp.float32)
+
+
+@jax.tree_util.register_dataclass
+@dataclass
+class TechParams:
+    """Technology parameters.  Mem fields are [N_MEM] (per memory unit);
+    comp fields are [N_COMP] (per compute unit)."""
+
+    # --- MemTechPars (paper Table 2) ---
+    mem_wire_cap: jax.Array  # fF / um of wire
+    mem_wire_resist: jax.Array  # ohm / um of wire
+    cell_read_latency: jax.Array  # s, intrinsic cell sensing latency
+    cell_access_device: jax.Array  # relative access-device strength (1.0 = ref)
+    cell_read_power: jax.Array  # pJ / bit dynamic read
+    cell_leakage_power: jax.Array  # nW / bit standby leakage
+    cell_area: jax.Array  # um^2 / bit
+    peripheral_node: jax.Array  # nm, peripheral logic node
+    # --- CompTechPars ---
+    comp_wire_cap: jax.Array  # fF / um
+    comp_wire_resist: jax.Array  # ohm / um
+    node: jax.Array  # nm, logic node per compute class
+
+    @staticmethod
+    def default() -> "TechParams":
+        """40nm-reference technology point (paper Alg. 6: 'table at 40nm').
+
+        localMem / globalBuf default to SRAM-like cells, mainMem to DRAM.
+        """
+        return TechParams(
+            mem_wire_cap=_f([0.20, 0.20, 0.25]),
+            mem_wire_resist=_f([1.2, 1.2, 2.0]),
+            cell_read_latency=_f([0.15e-9, 0.50e-9, 12e-9]),
+            cell_access_device=_f([1.0, 1.0, 1.0]),
+            cell_read_power=_f([0.004, 0.010, 2.0]),  # pJ/bit (dram incl. I/O)
+            cell_leakage_power=_f([1.0e-3, 0.8e-3, 0.02e-3]),  # nW/bit
+            cell_area=_f([0.30, 0.15, 0.0030]),  # um^2/bit
+            peripheral_node=_f([40.0, 40.0, 40.0]),
+            comp_wire_cap=_f([0.20] * N_COMP),
+            comp_wire_resist=_f([1.2] * N_COMP),
+            node=_f([40.0] * N_COMP),
+        )
+
+    @staticmethod
+    def bounds() -> tuple["TechParams", "TechParams"]:
+        """Realistic lower/upper bounds (paper Alg. 6 step 5)."""
+        lo = TechParams(
+            mem_wire_cap=_f([0.02] * N_MEM),
+            mem_wire_resist=_f([0.1] * N_MEM),
+            cell_read_latency=_f([0.01e-9, 0.05e-9, 1e-9]),
+            cell_access_device=_f([0.25] * N_MEM),
+            cell_read_power=_f([2e-4, 5e-4, 0.05]),
+            cell_leakage_power=_f([1e-6] * N_MEM),
+            cell_area=_f([0.01, 0.005, 1e-4]),
+            peripheral_node=_f([3.0] * N_MEM),
+            comp_wire_cap=_f([0.02] * N_COMP),
+            comp_wire_resist=_f([0.1] * N_COMP),
+            node=_f([3.0] * N_COMP),
+        )
+        hi = TechParams(
+            mem_wire_cap=_f([1.0] * N_MEM),
+            mem_wire_resist=_f([10.0] * N_MEM),
+            cell_read_latency=_f([5e-9, 5e-9, 100e-9]),
+            cell_access_device=_f([4.0] * N_MEM),
+            cell_read_power=_f([0.05, 0.2, 20.0]),
+            cell_leakage_power=_f([0.05] * N_MEM),
+            cell_area=_f([2.0, 1.0, 0.05]),
+            peripheral_node=_f([90.0] * N_MEM),
+            comp_wire_cap=_f([1.0] * N_COMP),
+            comp_wire_resist=_f([10.0] * N_COMP),
+            node=_f([90.0] * N_COMP),
+        )
+        return lo, hi
+
+
+@jax.tree_util.register_dataclass
+@dataclass
+class ArchParams:
+    """Architectural parameters (design-time tunable)."""
+
+    # systolic array
+    sys_arr_x: jax.Array  # PE rows
+    sys_arr_y: jax.Array  # PE cols
+    sys_arr_n: jax.Array  # number of arrays
+    # vector unit
+    vect_width: jax.Array  # lanes
+    vect_n: jax.Array  # units
+    # mac tree
+    mtree_x: jax.Array
+    mtree_y: jax.Array
+    mtree_tile_x: jax.Array
+    mtree_tile_y: jax.Array
+    # fpu
+    fpu_n: jax.Array
+    # SoC
+    frequency: jax.Array  # Hz
+    # memories: [N_MEM]
+    capacity: jax.Array  # bytes
+    bank_size: jax.Array  # bytes
+    n_read_ports: jax.Array
+
+    @staticmethod
+    def default() -> "ArchParams":
+        """A TPU-v1-flavoured edge accelerator starting point."""
+        return ArchParams(
+            sys_arr_x=_f(128.0),
+            sys_arr_y=_f(128.0),
+            sys_arr_n=_f(2.0),
+            vect_width=_f(256.0),
+            vect_n=_f(4.0),
+            mtree_x=_f(64.0),
+            mtree_y=_f(8.0),
+            mtree_tile_x=_f(8.0),
+            mtree_tile_y=_f(8.0),
+            fpu_n=_f(8.0),
+            frequency=_f(0.94e9),
+            capacity=_f([4 * 2**20, 24 * 2**20, 16 * 2**30]),
+            bank_size=_f([32 * 2**10, 256 * 2**10, 8 * 2**20]),
+            n_read_ports=_f([16.0, 8.0, 8.0]),
+        )
+
+    @staticmethod
+    def bounds() -> tuple["ArchParams", "ArchParams"]:
+        lo = ArchParams(
+            sys_arr_x=_f(4.0), sys_arr_y=_f(4.0), sys_arr_n=_f(1.0),
+            vect_width=_f(8.0), vect_n=_f(1.0),
+            mtree_x=_f(4.0), mtree_y=_f(1.0), mtree_tile_x=_f(1.0), mtree_tile_y=_f(1.0),
+            fpu_n=_f(1.0), frequency=_f(0.2e9),
+            capacity=_f([2**16, 2**20, 2**30]),
+            bank_size=_f([2**12, 2**14, 2**19]),
+            n_read_ports=_f([1.0, 1.0, 1.0]),
+        )
+        hi = ArchParams(
+            sys_arr_x=_f(1024.0), sys_arr_y=_f(1024.0), sys_arr_n=_f(64.0),
+            vect_width=_f(4096.0), vect_n=_f(128.0),
+            mtree_x=_f(1024.0), mtree_y=_f(256.0), mtree_tile_x=_f(64.0), mtree_tile_y=_f(64.0),
+            fpu_n=_f(512.0), frequency=_f(3e9),
+            capacity=_f([64 * 2**20, 512 * 2**20, 256 * 2**30]),
+            bank_size=_f([2**20, 2**23, 2**26]),
+            n_read_ports=_f([64.0, 64.0, 64.0]),
+        )
+        return lo, hi
+
+
+@dataclass(frozen=True)
+class ArchSpec:
+    """Architectural specification (paper §5.1): which units exist and
+    which memory technology backs each memory unit.  Static (not a pytree)."""
+
+    mem_units: tuple[str, ...] = MEM_CLS
+    comp_units: tuple[str, ...] = COMP_CLS
+    mem_type: tuple[str, ...] = ("sram", "sram", "dram")  # per MEM_CLS entry
+
+    def mem_type_idx(self) -> np.ndarray:
+        return np.array([MEM_TYPES.index(t) for t in self.mem_type], dtype=np.int32)
+
+    def comp_mask(self) -> np.ndarray:
+        return np.array([1.0 if c in self.comp_units else 0.0 for c in COMP_CLS], np.float32)
+
+    def mem_mask(self) -> np.ndarray:
+        return np.array([1.0 if m in self.mem_units else 0.0 for m in MEM_CLS], np.float32)
+
+
+def clamp_params(p, lo, hi):
+    return jax.tree.map(lambda x, l, h: jnp.clip(x, l, h), p, lo, hi)

@@ -1,0 +1,91 @@
+"""Population-parallel design-space exploration, sharded over the mesh.
+
+The paper runs DOpt single-host.  At cluster scale, DSE is a population of
+independent gradient-descent candidates (multi-start over the non-convex
+design/technology space, paper Fig. 3) evaluated against a *set* of
+workloads.  We shard:
+
+  * population axis -> mesh ("pod", "data") — candidates are independent;
+  * workload axis   -> mesh ("model",)      — objectives all-reduce.
+
+``dse_step`` is a pjit program lowered/compiled in the multi-pod dry-run
+like every LM cell, proving DRAGON itself distributes.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.dopt import from_log, to_log
+from repro.core.dsim import objective_value, simulate
+from repro.core.graph import Graph
+from repro.core.mapper import MapperCfg
+from repro.core.params import ArchParams, ArchSpec, TechParams
+
+
+def init_population(key: jax.Array, n: int, sigma: float = 0.3):
+    """n jittered copies of the default design point (log-normal)."""
+    tech, arch = TechParams.default(), ArchParams.default()
+    leaves, treedef = jax.tree.flatten((tech, arch))
+    keys = jax.random.split(key, len(leaves))
+    pop = [
+        jnp.exp(jnp.log(l)[None, ...] + sigma * jax.random.normal(k, (n,) + l.shape))
+        for l, k in zip(leaves, keys)
+    ]
+    return jax.tree.unflatten(treedef, pop)
+
+
+def population_objective(pop, graphs: Graph, objective: str = "edp", spec: ArchSpec = ArchSpec(), mcfg: MapperCfg = MapperCfg()):
+    """[P] objectives for a population against stacked workloads.
+
+    ``graphs``: a Graph whose arrays carry a leading workload axis W (padded
+    to equal vertex count; see Graph.pad_to).  Result is the mean log
+    objective across workloads, per candidate.
+    """
+
+    def one_candidate(tech, arch):
+        def one_workload(g):
+            perf = simulate(tech, arch, g, spec, mcfg)
+            return jnp.log(objective_value(perf, objective))
+
+        return jnp.mean(jax.vmap(one_workload)(graphs))
+
+    tech, arch = pop
+    return jax.vmap(one_candidate)(tech, arch)
+
+
+def make_dse_step(objective: str = "edp", lr: float = 0.05, spec: ArchSpec = ArchSpec()):
+    """One population gradient-descent epoch: grads in log-space, SGD update."""
+
+    def dse_step(pop, graphs: Graph):
+        pop_z = to_log(pop)
+
+        def loss(pz):
+            return jnp.sum(population_objective(from_log(pz), graphs, objective, spec))
+
+        grads = jax.grad(loss)(pop_z)
+        new_z = jax.tree.map(lambda p, g: p - lr * g, pop_z, grads)
+        new_pop = from_log(new_z)
+        return new_pop, population_objective(new_pop, graphs, objective, spec)
+
+    return dse_step
+
+
+def shard_population(mesh, pop, pop_axes=("pod", "data")):
+    """NamedShardings placing the population along pod+data axes."""
+    axes = tuple(a for a in pop_axes if a in mesh.axis_names)
+    spec = P(axes)
+    return jax.tree.map(lambda x: jax.device_put(x, NamedSharding(mesh, spec)), pop)
+
+
+def dse_in_shardings(mesh, pop, graphs):
+    axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    pop_s = jax.tree.map(lambda _: NamedSharding(mesh, P(axes)), pop)
+    g_s = jax.tree.map(
+        lambda x: NamedSharding(mesh, P("model") if x.ndim >= 1 and x.shape[0] % mesh.shape["model"] == 0 else P()),
+        graphs,
+    )
+    return (pop_s, g_s)

@@ -1,0 +1,1 @@
+from repro.ft.straggler import FailureInjector, SimulatedFailure, StragglerMonitor  # noqa: F401

@@ -1,0 +1,67 @@
+"""Straggler detection + simulated-failure machinery for the train loop.
+
+On a real multi-host deployment each host reports its step wall-time; the
+coordinator compares against the fleet EWMA.  In this single-process harness
+the monitor tracks per-step times, flags >k-sigma outliers (slow data feed,
+GC pause, a simulated slow device), and the trainer responds per policy:
+log, skip-and-rebalance, or (for persistent stragglers) trigger a
+checkpoint-restore cycle excluding the bad host — exercised by
+tests/test_fault_tolerance.py with injected failures.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Optional
+
+
+@dataclass
+class StragglerMonitor:
+    alpha: float = 0.1  # EWMA weight
+    k_sigma: float = 4.0
+    warmup_steps: int = 5
+    ewma: float = 0.0
+    ewvar: float = 0.0
+    n: int = 0
+    flagged: list = field(default_factory=list)
+
+    def record(self, step: int, dt: float) -> bool:
+        """Record a step time; returns True if this step is a straggler."""
+        self.n += 1
+        if self.n <= self.warmup_steps:
+            # warmup covers jit compilation; re-prime at the steady state so
+            # the (huge) compile step never inflates the baseline
+            self.ewma = dt if self.n == 1 else (1 - self.alpha) * self.ewma + self.alpha * dt
+            self.ewvar = max(self.ewvar, (dt - self.ewma) ** 2)
+            if self.n == self.warmup_steps:
+                self.ewma = dt
+                self.ewvar = (0.25 * dt) ** 2
+            return False
+        resid = dt - self.ewma
+        is_straggler = resid > self.k_sigma * max(self.ewvar, 1e-12) ** 0.5 and dt > 1.5 * self.ewma
+        self.ewma = (1 - self.alpha) * self.ewma + self.alpha * dt
+        self.ewvar = (1 - self.alpha) * self.ewvar + self.alpha * resid * resid
+        if is_straggler:
+            self.flagged.append((step, dt))
+        return is_straggler
+
+
+class SimulatedFailure(RuntimeError):
+    """Raised by fault-injection hooks to emulate device/host loss."""
+
+
+@dataclass
+class FailureInjector:
+    """Deterministic failure schedule for tests: fail at given steps."""
+
+    fail_at: tuple = ()
+    slow_at: tuple = ()
+    slow_secs: float = 0.05
+    fired: set = field(default_factory=set)
+
+    def maybe_fail(self, step: int):
+        if step in self.fail_at and step not in self.fired:
+            self.fired.add(step)
+            raise SimulatedFailure(f"injected device loss at step {step}")
+        if step in self.slow_at:
+            time.sleep(self.slow_secs)

@@ -1,0 +1,17 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+flash_attention — train/prefill attention (8/10 archs' hot spot)
+ssd             — Mamba2 chunked SSD scan (hybrid + long-context cells)
+popsim_kernel   — DSim population evaluation (the paper's speed claim)
+
+Each kernel ships with a pure-jnp oracle in ref.py; ops.py holds the jit'd
+public wrappers (interpret=True on CPU, Mosaic on TPU).
+"""
+from repro.kernels.ops import (  # noqa: F401
+    flash_attention,
+    pack_chw,
+    pack_graph,
+    popsim,
+    selective_scan,
+    ssd_chunk_scan,
+)

@@ -1,0 +1,136 @@
+"""Pallas TPU flash attention (GQA, causal) — the compute hot-spot of 8/10
+assigned architectures (train + 32k prefill cells).
+
+Design (TPU-native, DESIGN.md §6):
+  * grid = (batch, q_heads, Sq/block_q, Skv/block_k); the kv dimension is the
+    innermost, sequentially-iterated ("arbitrary") axis, so the online-softmax
+    carries (m, l, acc) live in VMEM scratch across kv steps — the canonical
+    MaxText/Pallas accumulation pattern.
+  * BlockSpecs keep one (block_q, head_dim) Q tile and one (block_k, head_dim)
+    K/V tile in VMEM per step: with the default 512x512 bf16 blocks and
+    head_dim 128 that is ~0.8 MB of operand VMEM, MXU-aligned (multiples of
+    (16,128) for bf16).
+  * GQA by index mapping: kv block index = q_head // group_size — no K/V
+    replication in HBM.
+  * causal masking by global block offset; fully-masked kv blocks are skipped
+    via jnp.where on the accumulation (XLA hoists the comparison; on TPU the
+    block is still fetched — the §Perf log covers the block-skip variant).
+  * accumulation in fp32 regardless of input dtype.
+
+Validated against ref.reference_attention in interpret mode (CPU) across
+shape/dtype sweeps in tests/test_kernels.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(
+    q_ref, k_ref, v_ref,  # inputs
+    o_ref,  # output
+    m_ref, l_ref, acc_ref,  # VMEM scratch carries
+    *,
+    scale: float,
+    causal: bool,
+    block_q: int,
+    block_k: int,
+    kv_steps: int,
+    off: int = 0,  # Skv - Sq: suffix-causal (query i sees keys <= i + off)
+):
+    qi = pl.program_id(2)
+    kj = pl.program_id(3)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)  # [bq, d]
+    k = k_ref[0, 0].astype(jnp.float32)  # [bk, d]
+    v = v_ref[0, 0].astype(jnp.float32)  # [bk, d]
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale  # [bq, bk]
+
+    if causal:
+        q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+        k_pos = kj * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        s = jnp.where(q_pos + off >= k_pos, s, NEG_INF)
+
+    m_prev = m_ref[...]  # [bq, 1]
+    l_prev = l_ref[...]
+    m_cur = jnp.max(s, axis=-1, keepdims=True)  # [bq, 1]
+    m_new = jnp.maximum(m_prev, m_cur)
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)  # [bq, bk]
+    l_new = alpha * l_prev + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(kj == kv_steps - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention(
+    q: jax.Array,  # [B, Hq, Sq, D]
+    k: jax.Array,  # [B, Hkv, Skv, D]
+    v: jax.Array,  # [B, Hkv, Skv, D]
+    *,
+    causal: bool = True,
+    scale: float | None = None,
+    block_q: int = 512,
+    block_k: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    B, Hq, Sq, D = q.shape
+    _, Hkv, Skv, _ = k.shape
+    assert Hq % Hkv == 0, (Hq, Hkv)
+    group = Hq // Hkv
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Skv)
+    assert Sq % block_q == 0 and Skv % block_k == 0, (Sq, block_q, Skv, block_k)
+    scale = scale if scale is not None else D ** -0.5
+    q_steps, kv_steps = Sq // block_q, Skv // block_k
+
+    kernel = functools.partial(
+        _attn_kernel,
+        scale=scale,
+        causal=causal,
+        block_q=block_q,
+        block_k=block_k,
+        kv_steps=kv_steps,
+        off=Skv - Sq,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(B, Hq, q_steps, kv_steps),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, D), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, block_k, D), lambda b, h, i, j, g=group: (b, h // g, j, 0)),
+            pl.BlockSpec((1, 1, block_k, D), lambda b, h, i, j, g=group: (b, h // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, D), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),  # m: running row max
+            pltpu.VMEM((block_q, 1), jnp.float32),  # l: running row sum
+            pltpu.VMEM((block_q, D), jnp.float32),  # acc
+        ],
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel", "arbitrary"),
+        ),
+    )(q, k, v)

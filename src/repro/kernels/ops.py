@@ -1,0 +1,94 @@
+"""Jit'd public wrappers around the Pallas kernels + packing helpers.
+
+``interpret`` defaults to auto: Pallas kernel bodies execute in Python on
+CPU (this container) and compile to Mosaic on real TPU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.dgen import ConcreteHW
+from repro.core.graph import Graph
+from repro.kernels import popsim_kernel as pk
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.ssd import ssd_chunk_scan as _ssd
+
+
+def _auto_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k", "interpret"))
+def flash_attention(q, k, v, *, causal=True, block_q=512, block_k=512, interpret=None):
+    interpret = _auto_interpret() if interpret is None else interpret
+    return _flash(q, k, v, causal=causal, block_q=block_q, block_k=block_k, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_chunk_scan(x, dt, A, B, C, *, chunk=256, interpret=None):
+    interpret = _auto_interpret() if interpret is None else interpret
+    return _ssd(x, dt, A, B, C, chunk=chunk, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "block_c", "interpret"))
+def selective_scan(u, dt, A, B, C, D, *, chunk=64, block_c=512, interpret=None):
+    from repro.kernels.sscan import selective_scan_pallas
+
+    interpret = _auto_interpret() if interpret is None else interpret
+    return selective_scan_pallas(u, dt, A, B, C, D, chunk=chunk,
+                                 block_c=block_c, interpret=interpret)
+
+
+# --------------------------------------------------------------------------- #
+# popsim packing
+# --------------------------------------------------------------------------- #
+
+
+def pack_chw(chw: ConcreteHW) -> jax.Array:
+    """Pack a ConcreteHW (or a vmapped population of them, leading dim P)
+    into the popsim kernel layout [P, CHW_COLS]."""
+
+    def pack_one(c: ConcreteHW) -> jax.Array:
+        parts = [
+            jnp.atleast_1d(c.frequency),
+            jnp.atleast_1d(c.capacity[pk._GBUF]),
+            c.mem_bw,
+            c.read_latency,
+            c.write_latency,
+            c.read_energy_pb,
+            c.write_energy_pb,
+            c.energy_per_flop,
+            c.flops_per_cycle,
+            jnp.atleast_1d(c.sys_x),
+            jnp.atleast_1d(c.sys_y),
+        ]
+        return jnp.concatenate(parts).astype(jnp.float32)
+
+    if jnp.ndim(chw.frequency) == 0:
+        return pack_one(chw)[None, :]
+    return jax.vmap(pack_one)(chw)
+
+
+def pack_graph(g: Graph) -> jax.Array:
+    """Pack a Graph into the popsim kernel layout [V, GRAPH_COLS]."""
+    V = g.n_vertices
+    out = jnp.zeros((V, pk.GRAPH_COLS), jnp.float32)
+    out = out.at[:, pk.G_COMP].set(g.n_comp)
+    out = out.at[:, pk.G_READ].set(g.n_read)
+    out = out.at[:, pk.G_WRITE].set(g.n_write)
+    out = out.at[:, pk.G_ALLOC_GBUF].set(g.n_alloc[:, 1])
+    out = out.at[:, pk.G_MAIN_PRESENT].set((g.n_alloc[:, 2] > 0).astype(jnp.float32))
+    out = out.at[:, pk.G_DIMS].set(g.dims)
+    return out
+
+
+@functools.partial(jax.jit, static_argnames=("block_pop", "interpret"))
+def popsim(graph_packed, chw_packed, *, block_pop=128, interpret=None):
+    interpret = _auto_interpret() if interpret is None else interpret
+    P = chw_packed.shape[0]
+    bp = int(np.gcd(block_pop, P))
+    return pk.popsim(graph_packed, chw_packed, block_pop=bp, interpret=interpret)

@@ -1,0 +1,132 @@
+"""Pure-jnp oracles for every Pallas kernel (the ground truth the kernels
+must match in tests/test_kernels.py shape/dtype sweeps)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import popsim_kernel as pk
+
+
+def reference_attention(
+    q: jax.Array,  # [B, Hq, Sq, D]
+    k: jax.Array,  # [B, Hkv, Skv, D]
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    scale: float | None = None,
+) -> jax.Array:
+    """Naive full-materialization attention with GQA, fp32 softmax."""
+    B, Hq, Sq, D = q.shape
+    _, Hkv, Skv, _ = k.shape
+    group = Hq // Hkv
+    scale = scale if scale is not None else D ** -0.5
+    k = jnp.repeat(k, group, axis=1)
+    v = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((Sq, Skv), bool), k=Skv - Sq)
+        s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def ssd_reference(
+    x: jax.Array,  # [B, S, H, P]
+    dt: jax.Array,  # [B, S, H]
+    A: jax.Array,  # [H]
+    Bm: jax.Array,  # [B, S, N]
+    C: jax.Array,  # [B, S, N]
+) -> tuple[jax.Array, jax.Array]:
+    """Exact per-timestep SSM recurrence (the definition SSD reformulates):
+
+      state_t = exp(dt_t A_h) state_{t-1} + dt_t * (B_t outer x_t)
+      y_t     = C_t . state_t
+    """
+    xf, dtf = x.astype(jnp.float32), dt.astype(jnp.float32)
+    Bf, Cf, Af = Bm.astype(jnp.float32), C.astype(jnp.float32), A.astype(jnp.float32)
+
+    def step(state, inp):  # state [B, H, N, P]
+        x_t, dt_t, B_t, C_t = inp  # [B,H,P], [B,H], [B,N], [B,N]
+        decay = jnp.exp(dt_t * Af[None, :])  # [B, H]
+        upd = dt_t[..., None, None] * (B_t[:, None, :, None] * x_t[:, :, None, :])
+        state = decay[..., None, None] * state + upd
+        y_t = jnp.einsum("bn,bhnp->bhp", C_t, state)
+        return state, y_t
+
+    Bsz, S, H, P = x.shape
+    N = Bm.shape[-1]
+    state0 = jnp.zeros((Bsz, H, N, P), jnp.float32)
+    xs = (
+        jnp.moveaxis(xf, 1, 0),  # [S, B, H, P]
+        jnp.moveaxis(dtf, 1, 0),
+        jnp.moveaxis(Bf, 1, 0),
+        jnp.moveaxis(Cf, 1, 0),
+    )
+    state, ys = jax.lax.scan(step, state0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), state
+
+
+def popsim_reference(graph_packed: jax.Array, chw_packed: jax.Array) -> jax.Array:
+    """lax.scan-over-vertices oracle with the popsim kernel's exact math,
+    vmapped over candidates.  Returns [P, OUT_COLS]."""
+
+    def one(chw):  # chw: [CHW_COLS]
+        freq = chw[pk.FREQ]
+        cap_gbuf = chw[pk.CAP_GBUF] * pk.HEADROOM
+        bw, rlat, wlat = chw[pk.BW], chw[pk.RLAT], chw[pk.WLAT]
+        re_pb, we_pb = chw[pk.RE_PB], chw[pk.WE_PB]
+        e_flop, rate = chw[pk.E_FLOP], chw[pk.RATE]
+        sys_x, sys_y = chw[pk.SYS_X], chw[pk.SYS_Y]
+
+        def step(carry, g):
+            occupancy, bw_ema = carry
+            n_comp, n_read, n_write = g[pk.G_COMP], g[pk.G_READ], g[pk.G_WRITE]
+            alloc_gbuf, has_main = g[pk.G_ALLOC_GBUF], g[pk.G_MAIN_PRESENT]
+            M, N = g[pk.G_DIMS][0], g[pk.G_DIMS][1]
+
+            tiles = jnp.maximum(jnp.ceil(alloc_gbuf / cap_gbuf), 1.0)
+            m_t = jnp.maximum(M / tiles, 1.0)
+            K = g[pk.G_DIMS][2]
+            waves = jnp.ceil(m_t / sys_x) * jnp.ceil(jnp.maximum(N, 1.0) / sys_y)
+            cyc_sys_tile = waves * (jnp.ceil(jnp.maximum(K, 1.0)) + sys_x + sys_y)
+            ops_sys_tile = n_comp[pk._SYS] / tiles
+            cyc_sys_tile = jnp.maximum(
+                cyc_sys_tile, ops_sys_tile / jnp.maximum(rate[pk._SYS], 1e-9)
+            )
+            t_sys = jnp.where(ops_sys_tile > 0, tiles * cyc_sys_tile / freq, 0.0)
+            eff = jnp.maximum(rate, 1e-9) * freq
+            t_comp = jnp.maximum(jnp.max((n_comp / eff).at[pk._SYS].set(0.0)), t_sys)
+
+            t_lvl = (n_read + n_write) / bw * 1.04
+            t_tile_lat = tiles * (rlat + wlat)
+            t_onchip = jnp.maximum(t_lvl[pk._GBUF] + t_tile_lat[pk._GBUF], t_lvl[pk._LOCAL])
+            t_main = t_lvl[pk._MAIN] + t_tile_lat[pk._MAIN] * has_main
+
+            can_pf = ((occupancy + alloc_gbuf / tiles) < cap_gbuf).astype(jnp.float32) * (
+                bw_ema < pk.HEADROOM
+            ).astype(jnp.float32)
+            can_st = (bw_ema < pk.HEADROOM).astype(jnp.float32)
+            hide = jnp.maximum(can_pf, can_st)
+
+            t_core = jnp.maximum(t_comp, t_onchip)
+            t_exposed = jnp.maximum(t_main - hide * t_core, 0.0)
+            # integer-cycle quantization per tile (matches mapper.py)
+            t_vertex = tiles * jnp.ceil((t_core + t_exposed) * freq / tiles) / freq
+
+            used_bw = jnp.where(
+                t_vertex > 0,
+                (n_read[pk._GBUF] + n_write[pk._GBUF]) / jnp.maximum(t_vertex, 1e-30) / bw[pk._GBUF],
+                0.0,
+            )
+            bw_ema = 0.8 * bw_ema + 0.2 * jnp.clip(used_bw, 0.0, 2.0)
+            occupancy = jnp.minimum(0.5 * occupancy + alloc_gbuf, cap_gbuf / pk.HEADROOM)
+
+            e_v = jnp.sum(n_read * re_pb + n_write * we_pb) + jnp.sum(n_comp * e_flop)
+            out = jnp.stack([t_vertex * freq, e_v, t_comp, t_onchip, t_exposed, tiles, 0.0, 0.0])
+            return (occupancy, bw_ema), out
+
+        _, outs = jax.lax.scan(step, (jnp.float32(0.0), jnp.float32(0.0)), graph_packed)
+        return jnp.sum(outs, axis=0)
+
+    return jax.vmap(one)(chw_packed)

@@ -1,0 +1,134 @@
+"""Pallas TPU chunked SSD scan (Mamba2) — the hot loop of the zamba2 hybrid
+and the long_500k cells.
+
+The SSD (state-space dual) form splits the sequence into chunks of length L:
+intra-chunk work is dense matmuls (MXU-friendly), and only a small [N, P]
+state carries between chunks.  This kernel implements the exact chunked
+recurrence:
+
+  per head h, chunk c:
+    dtA       = dt * A_h                      [L]
+    cum       = cumsum(dtA)                   [L]
+    Lmat[i,j] = exp(cum_i - cum_j) (i >= j)   [L, L]   (decay matrix)
+    y_diag[i] = sum_j (C_i . B_j) Lmat[i,j] dt_j x_j      (intra-chunk)
+    y_off[i]  = (C_i . state) exp(cum_i)                  (inter-chunk)
+    state'    = exp(cum_last) state + B^T diag(exp(cum_last - cum) dt) x
+
+Grid: (batch, heads, chunks) with the chunk axis sequential ("arbitrary") so
+the state lives in VMEM scratch across chunk steps.  Blocks: x (L, P),
+B/C (L, N), dt (L,) — with L=256, P=64, N=64 in bf16 that is ~100 KB VMEM.
+fp32 accumulation throughout; cum/decay math in fp32.
+
+The chunked form is algebraically exact, so the oracle (ref.ssd_reference —
+a naive per-timestep lax.scan) must match to fp tolerance.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(
+    x_ref,  # [1, L, 1, P]
+    dt_ref,  # [1, L, 1]
+    a_ref,  # [1, 1]  A coefficient for this head (negative)
+    b_ref,  # [1, L, N]
+    c_ref,  # [1, L, N]
+    y_ref,  # [1, L, 1, P] out
+    state_out_ref,  # [1, 1, N, P] out (final state)
+    state_ref,  # VMEM scratch [N, P] fp32
+    *,
+    n_chunks: int,
+):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    x = x_ref[0, :, 0, :].astype(jnp.float32)  # [L, P]
+    dt = dt_ref[0, :, 0].astype(jnp.float32)  # [L]
+    A = a_ref[0, 0].astype(jnp.float32)  # scalar
+    B = b_ref[0].astype(jnp.float32)  # [L, N]
+    C = c_ref[0].astype(jnp.float32)  # [L, N]
+
+    dtA = dt * A  # [L]
+    cum = jnp.cumsum(dtA)  # [L]
+    cum_last = cum[-1]
+
+    # intra-chunk: scores[i,j] = (C_i . B_j) * exp(cum_i - cum_j) * dt_j, i >= j
+    cb = jax.lax.dot_general(C, B, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)  # [L, L]
+    L = cum.shape[0]
+    decay = jnp.exp(cum[:, None] - cum[None, :])
+    ii = jax.lax.broadcasted_iota(jnp.int32, (L, L), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (L, L), 1)
+    scores = jnp.where(ii >= jj, cb * decay * dt[None, :], 0.0)
+    y = jax.lax.dot_general(scores, x, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)  # [L, P]
+
+    # inter-chunk: contribution of the carried state
+    state = state_ref[...]  # [N, P]
+    y += jnp.exp(cum)[:, None] * jax.lax.dot_general(
+        C, state, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+    # state update
+    w = (jnp.exp(cum_last - cum) * dt)[:, None]  # [L, 1]
+    state_new = jnp.exp(cum_last) * state + jax.lax.dot_general(
+        B, x * w, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )  # [N, P]
+    state_ref[...] = state_new
+
+    y_ref[0, :, 0, :] = y.astype(y_ref.dtype)
+
+    @pl.when(ci == n_chunks - 1)
+    def _finish():
+        state_out_ref[0, 0] = state_new.astype(state_out_ref.dtype)
+
+
+def ssd_chunk_scan(
+    x: jax.Array,  # [Batch, S, H, P]
+    dt: jax.Array,  # [Batch, S, H]   (softplus-activated, positive)
+    A: jax.Array,  # [H]             (negative)
+    B: jax.Array,  # [Batch, S, N]   (n_groups=1, shared across heads)
+    C: jax.Array,  # [Batch, S, N]
+    *,
+    chunk: int = 256,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (y [Batch,S,H,P], final_state [Batch,H,N,P])."""
+    Bt, S, H, P = x.shape
+    N = B.shape[-1]
+    chunk = min(chunk, S)
+    assert S % chunk == 0, (S, chunk)
+    n_chunks = S // chunk
+
+    kernel = functools.partial(_ssd_kernel, n_chunks=n_chunks)
+    y, state = pl.pallas_call(
+        kernel,
+        grid=(Bt, H, n_chunks),
+        in_specs=[
+            pl.BlockSpec((1, chunk, 1, P), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda b, h, c: (b, c, h)),
+            pl.BlockSpec((1, 1), lambda b, h, c: (0, h)),
+            pl.BlockSpec((1, chunk, N), lambda b, h, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, N), lambda b, h, c: (b, c, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, 1, P), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, 1, N, P), lambda b, h, c: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bt, S, H, P), x.dtype),
+            jax.ShapeDtypeStruct((Bt, H, N, P), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((N, P), jnp.float32)],
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+    )(x, dt, A.reshape(1, H), B, C)
+    return y, state

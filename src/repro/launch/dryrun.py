@@ -1,0 +1,307 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape) cell
+against the production mesh — 16x16=256 chips single-pod and 2x16x16=512
+chips multi-pod — and record the compiled artifact's cost/memory analysis +
+collective traffic for the roofline (EXPERIMENTS.md §Dry-run / §Roofline).
+
+No arrays are ever allocated at model scale: parameters, optimizer states,
+batches and KV caches all enter .lower() as ShapeDtypeStructs.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen2.5-32b --shape train_4k
+  python -m repro.launch.dryrun --all [--multipod both] [--out results/dryrun]
+  python -m repro.launch.dryrun --popsim            # DRAGON's own DSE program
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES, all_archs, cell_status, get_config
+from repro.launch.hlo_costs import hlo_costs
+from repro.launch.hlo_stats import collective_stats, while_trip_counts
+from repro.launch.mesh import make_production_mesh, mesh_chips
+from repro.launch.specs import (
+    abstract_batch,
+    as_shardings,
+    batch_specs,
+    train_state_specs,
+)
+from repro.models.model import build_model
+from repro.optim.adamw import AdamWConfig
+from repro.train.train_step import TrainConfig, abstract_train_state, make_train_step
+
+# TPU v5e-flavoured target constants (per chip) — §Roofline
+PEAK_FLOPS = 197e12  # bf16 FLOP/s
+HBM_BW = 819e9  # bytes/s
+LINK_BW = 50e9  # bytes/s per ICI link
+
+
+def opt_cfg_for(cfg) -> AdamWConfig:
+    # trillion-param MoE: int8 moments or optimizer state cannot fit HBM
+    int8 = cfg.family == "moe" and cfg.moe.n_experts >= 64
+    return AdamWConfig(int8_states=int8)
+
+
+def _lower_cell(arch: str, shape_name: str, multi_pod: bool, parallelism: str = "tp",
+                remat: str | None = None):
+    from repro.models.sharding import parallelism as parallelism_ctx
+
+    cfg = get_config(arch)
+    if remat:
+        cfg = dataclasses.replace(cfg, remat=remat)
+    shape = SHAPES[shape_name]
+    model = build_model(cfg)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    # decode at 500k with batch 1: shard the KV-cache sequence dim instead
+    # of the unshardable batch dim
+    n_batch_shards = mesh.shape.get("data", 1) * mesh.shape.get("pod", 1)
+    seq_shard = shape.kind == "decode" and shape.global_batch < n_batch_shards
+
+    ctx = parallelism_ctx(parallelism)
+    with mesh, ctx:
+        if shape.kind == "train":
+            ocfg, tcfg = opt_cfg_for(cfg), TrainConfig()
+            step = make_train_step(model, ocfg, tcfg, mesh=mesh)
+            state_abs = abstract_train_state(model, ocfg, tcfg)
+            batch_abs = abstract_batch(cfg, shape)
+            sspec = train_state_specs(model, mesh, ocfg, tcfg)
+            bspec = batch_specs(cfg, mesh, batch_abs)
+            fn = jax.jit(
+                step,
+                in_shardings=(as_shardings(mesh, sspec), as_shardings(mesh, bspec)),
+                out_shardings=(as_shardings(mesh, sspec), None),
+                donate_argnums=(0,),
+            )
+            lowered = fn.lower(state_abs, batch_abs)
+        elif shape.kind == "prefill":
+            pspec = model.specs(mesh)
+            batch_abs = abstract_batch(cfg, shape)
+            bspec = batch_specs(cfg, mesh, batch_abs)
+            params_abs = model.abstract_params()
+            args = [batch_abs["tokens"]]
+            in_sh = [as_shardings(mesh, pspec), NamedSharding(mesh, bspec["tokens"])]
+            if cfg.vision:
+                args.append(batch_abs["vision"])
+                in_sh.append(NamedSharding(mesh, bspec["vision"]))
+
+            if cfg.vision:
+                def fn(p, toks, vision):
+                    return model.prefill(p, toks, max_len=shape.seq_len, vision=vision, mesh=mesh)
+            else:
+                def fn(p, toks):
+                    return model.prefill(p, toks, max_len=shape.seq_len, mesh=mesh)
+
+            lowered = jax.jit(fn, in_shardings=tuple(in_sh)).lower(params_abs, *args)
+        else:  # decode
+            B, M = shape.global_batch, shape.seq_len
+            pspec = model.specs(mesh)
+            cache_abs = model.cache_struct(B, M)
+            cspec = model.cache_specs(mesh, B, M, seq_shard=seq_shard)
+            tok_shape = (B, 1, cfg.audio.n_codebooks) if cfg.audio else (B, 1)
+            toks_abs = jax.ShapeDtypeStruct(tok_shape, jnp.int32)
+            from repro.models.sharding import repair_spec
+
+            tspec = repair_spec(
+                P(_present(mesh, ("pod", "data")), *([None] * (len(tok_shape) - 1))),
+                tok_shape, mesh,
+            )
+
+            def fn(p, toks, cache):
+                return model.decode_step(p, toks, cache, mesh=mesh, seq_shard=seq_shard)
+
+            lowered = jax.jit(
+                fn,
+                in_shardings=(
+                    as_shardings(mesh, pspec),
+                    NamedSharding(mesh, tspec),
+                    as_shardings(mesh, cspec),
+                ),
+                donate_argnums=(2,),
+            ).lower(model.abstract_params(), toks_abs, cache_abs)
+    return lowered, mesh, model, shape
+
+
+def _present(mesh, axes):
+    got = tuple(a for a in axes if a in mesh.axis_names)
+    return got if len(got) > 1 else (got[0] if got else None)
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, collect_hlo: bool = True,
+             parallelism: str = "tp") -> dict:
+    t0 = time.time()
+    lowered, mesh, model, shape = _lower_cell(arch, shape_name, multi_pod, parallelism)
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    ma = compiled.memory_analysis()
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": mesh_chips(mesh),
+        "kind": shape.kind,
+        "parallelism": parallelism,
+        "ok": True,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        # XLA's own numbers (count while bodies ONCE — kept for reference)
+        "xla_flops_per_device": float(ca.get("flops", -1.0)),
+        "xla_bytes_per_device": float(ca.get("bytes accessed", -1.0)),
+        "memory": {
+            k: int(getattr(ma, k, -1))
+            for k in (
+                "argument_size_in_bytes",
+                "output_size_in_bytes",
+                "temp_size_in_bytes",
+                "alias_size_in_bytes",
+                "generated_code_size_in_bytes",
+            )
+        },
+    }
+    if collect_hlo:
+        txt = compiled.as_text()
+        rec["collectives"] = collective_stats(txt)
+        rec["scan_trip_counts"] = while_trip_counts(txt)[:32]
+        costs = hlo_costs(txt)  # trip-count-weighted (launch/hlo_costs.py)
+        rec["flops_per_device"] = costs["flops"]
+        rec["bytes_per_device"] = costs["bytes"]
+        rec["flops_by_op"] = costs["flops_by_op"]
+        rec["bytes_by_op"] = costs["bytes_by_op"]
+    # roofline terms (seconds) — per-device numerators over per-chip rates
+    live = (
+        rec["memory"]["argument_size_in_bytes"]
+        + rec["memory"]["output_size_in_bytes"]
+        - rec["memory"].get("alias_size_in_bytes", 0)
+        + rec["memory"]["temp_size_in_bytes"]
+    )
+    rec["hbm_per_device_gb"] = round(live / 1e9, 3)
+    rec["roofline"] = {
+        "t_compute": rec["flops_per_device"] / PEAK_FLOPS,
+        "t_memory": rec["bytes_per_device"] / HBM_BW,
+        "t_collective": rec.get("collectives", {}).get("total_bytes", 0) / LINK_BW,
+    }
+    rec["roofline"]["bottleneck"] = max(rec["roofline"], key=lambda k: rec["roofline"][k])
+    return rec
+
+
+def run_popsim(multi_pod: bool) -> dict:
+    """Lower DRAGON's own population-DSE step on the production mesh."""
+    from repro.core.popsim import dse_in_shardings, init_population, make_dse_step
+    from repro.workloads import get_workload
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_pop = 4096
+    pop = jax.eval_shape(lambda k: init_population(k, n_pop), jax.ShapeDtypeStruct((2,), jnp.uint32))
+    g = get_workload("bert_base")
+    W = mesh.shape["model"]
+    graphs = jax.eval_shape(
+        lambda: jax.tree.map(lambda x: jnp.stack([x] * W), g)
+    )
+    step = make_dse_step()
+    pop_s, g_s = dse_in_shardings(mesh, pop, graphs)
+    t0 = time.time()
+    with mesh:
+        lowered = jax.jit(step, in_shardings=(pop_s, g_s)).lower(pop, graphs)
+        compiled = lowered.compile()
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    txt = compiled.as_text()
+    return {
+        "arch": "dragon-popsim-dse",
+        "shape": f"pop{n_pop}",
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": mesh_chips(mesh),
+        "kind": "dse",
+        "ok": True,
+        "compile_s": round(time.time() - t0, 2),
+        "flops_per_device": float(ca.get("flops", -1.0)),
+        "bytes_per_device": float(ca.get("bytes accessed", -1.0)),
+        "collectives": collective_stats(txt),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--popsim", action="store_true")
+    ap.add_argument("--multipod", choices=("on", "off", "both"), default="off")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--resume", action="store_true", help="skip cells with existing JSON")
+    ap.add_argument("--parallelism", choices=("tp", "dp", "auto"), default="tp",
+                    help="model-axis policy; auto = launch.policy per cell")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    pods = {"on": [True], "off": [False], "both": [False, True]}[args.multipod]
+
+    if args.popsim:
+        for mp in pods:
+            rec = run_popsim(mp)
+            fn = os.path.join(args.out, f"popsim__{rec['mesh']}.json")
+            json.dump(rec, open(fn, "w"), indent=1)
+            print(f"[dryrun] popsim {rec['mesh']}: OK compile={rec['compile_s']}s")
+        return
+
+    cells = []
+    if args.all:
+        for a in all_archs():
+            for s in SHAPES:
+                cells.append((a, s))
+    else:
+        cells.append((args.arch, args.shape))
+
+    for arch, shape_name in cells:
+        status = cell_status(get_config(arch), SHAPES[shape_name])
+        for mp in pods:
+            mesh_tag = "2x16x16" if mp else "16x16"
+            fn = os.path.join(args.out, f"{arch}__{shape_name}__{mesh_tag}.json")
+            if args.resume and os.path.exists(fn):
+                print(f"[dryrun] skip existing {fn}")
+                continue
+            if status != "run":
+                rec = {"arch": arch, "shape": shape_name, "mesh": mesh_tag,
+                       "ok": True, "skipped": status}
+                json.dump(rec, open(fn, "w"), indent=1)
+                print(f"[dryrun] {arch} x {shape_name} [{mesh_tag}]: SKIP ({status})")
+                continue
+            try:
+                par = args.parallelism
+                if par == "auto":
+                    from repro.launch.policy import parallelism_for
+
+                    par = parallelism_for(get_config(arch), SHAPES[shape_name])
+                rec = run_cell(arch, shape_name, mp, parallelism=par)
+                r = rec["roofline"]
+                print(
+                    f"[dryrun] {arch} x {shape_name} [{mesh_tag}]: OK "
+                    f"compile={rec['compile_s']:.1f}s hbm/dev={rec['hbm_per_device_gb']}GB "
+                    f"t_comp={r['t_compute']:.3e} t_mem={r['t_memory']:.3e} "
+                    f"t_coll={r['t_collective']:.3e} -> {r['bottleneck']}"
+                )
+            except Exception as e:
+                rec = {"arch": arch, "shape": shape_name, "mesh": mesh_tag,
+                       "ok": False, "error": f"{type(e).__name__}: {e}",
+                       "traceback": traceback.format_exc()[-4000:]}
+                print(f"[dryrun] {arch} x {shape_name} [{mesh_tag}]: FAIL {type(e).__name__}: {e}")
+            json.dump(rec, open(fn, "w"), indent=1)
+
+
+if __name__ == "__main__":
+    main()

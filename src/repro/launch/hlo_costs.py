@@ -1,0 +1,317 @@
+"""Trip-count-aware HLO cost analysis (FLOPs + HBM bytes, per-op breakdown).
+
+``compiled.cost_analysis()`` counts every while (lax.scan) body ONCE — a
+61-layer scan is undercounted 61x, making it useless for the roofline. This
+walker parses the post-SPMD HLO text into computations, builds a symbol
+table (instruction/parameter -> shape), and folds costs bottom-up:
+
+  * dot:     2 * prod(out) * prod(contracting dims of lhs)
+  * fusion:  callee's internal FLOPs; bytes = callee params + fusion output
+             (one kernel: reads inputs, writes outputs — internal traffic
+             stays in registers/VMEM)
+  * while:   body cost x trip count (from known_trip_count or the condition
+             computation's comparison constant)
+  * element-wise / reduce / DUS / slice / collective: prod-of-shape flops
+    and operand+output bytes per the table in _op_cost
+
+Outputs: dict(flops, bytes, flops_by_op, bytes_by_op) — per device, since
+the SPMD module is the per-device program. Used by launch/dryrun.py and
+benchmarks/bench_roofline.py; the per-op breakdown is the profile the §Perf
+hillclimb reads.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "token": 0, "u4": 1, "s4": 1,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*"
+    r"(\([^()]*\)|[a-z0-9]+\[[0-9,]*\]\S*)\s+"  # tuple types carry {layouts}
+    r"([\w\-]+)\((.*)$"
+)
+_HDR_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\((.*)\)\s*->")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_TRIP_RE = re.compile(r'known_trip_count=\{"?n"?[:=]"?(\d+)"?\}')
+_WHILE_ATTR_RE = re.compile(r"condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)")
+_CALLS_RE = re.compile(r"(?:calls=|to_apply=)%?([\w.\-]+)")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_CDIMS_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "negate",
+    "abs", "exponential", "log", "tanh", "rsqrt", "sqrt", "power", "compare",
+    "select", "clamp", "and", "or", "xor", "not", "cosine", "sine",
+    "logistic", "sign", "floor", "ceil", "round-nearest-even",
+    "round-nearest-afz", "remainder", "atan2", "expm1", "log1p", "cbrt",
+    "shift-left", "shift-right-logical", "shift-right-arithmetic",
+    "exponential-minus-one", "is-finite",
+}
+_ZERO_COST = {
+    "parameter", "constant", "iota", "bitcast", "reshape", "tuple",
+    "get-tuple-element", "after-all", "partition-id", "replica-id",
+    "rng-bit-generator", "rng", "bitcast-convert", "opt-barrier",
+    "custom-call", "infeed", "outfeed", "domain",
+}
+_COLLECTIVES = {
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute", "all-reduce-start", "all-gather-start",
+    "collective-permute-start",
+}
+
+
+def _type_bytes_elems(t: str) -> tuple[int, int]:
+    """(total bytes, total elements) of a type string (handles tuples)."""
+    total_b = total_e = 0
+    for dt, dims in _SHAPE_RE.findall(t):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total_e += n
+        total_b += n * _DTYPE_BYTES.get(dt, 4)
+    return total_b, total_e
+
+
+def _shape_dims(t: str) -> list[int]:
+    m = _SHAPE_RE.search(t)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+def _split_params(s: str) -> list[tuple[str, str]]:
+    """'p1: f32[..], p2: (f32[..], s32[])' -> [(name, type), ...]"""
+    out, depth, cur = [], 0, ""
+    for ch in s:
+        if ch == "(" or ch == "{" or ch == "[":
+            depth += 1
+        elif ch == ")" or ch == "}" or ch == "]":
+            depth -= 1
+        if ch == "," and depth == 0:
+            out.append(cur)
+            cur = ""
+        else:
+            cur += ch
+    if cur.strip():
+        out.append(cur)
+    parsed = []
+    for item in out:
+        if ":" in item:
+            name, t = item.split(":", 1)
+            parsed.append((name.strip().lstrip("%"), t.strip()))
+    return parsed
+
+
+class HloModule:
+    def __init__(self, text: str):
+        self.comps: dict[str, dict] = {}
+        self.entry: str | None = None
+        self._eff_param_cache: dict[str, float] = {}
+        cur = None
+        for line in text.splitlines():
+            s = line.rstrip()
+            st = s.strip()
+            if st.endswith("{") and ("->" in st or st.startswith("ENTRY")):
+                m = _HDR_RE.match(st)
+                if m:
+                    name = m.group(2)
+                    cur = {"lines": [], "params": dict(_split_params(m.group(3))), "fusion_body": False}
+                    self.comps[name] = cur
+                    if m.group(1):
+                        self.entry = name
+                continue
+            if st == "}" or st.startswith("} "):
+                cur = None
+                continue
+            if cur is not None and st:
+                cur["lines"].append(st)
+        # mark fusion bodies (callees of fusion instructions)
+        for c in self.comps.values():
+            for ln in c["lines"]:
+                if " fusion(" in ln:
+                    for callee in _CALLS_RE.findall(ln):
+                        if callee in self.comps:
+                            self.comps[callee]["fusion_body"] = True
+
+    # ------------------------------------------------------------------ #
+    def _symtab(self, comp: dict) -> dict:
+        tab = dict(comp["params"])
+        for ln in comp["lines"]:
+            m = _INSTR_RE.match(ln)
+            if m:
+                tab[m.group(1)] = m.group(2)
+        return tab
+
+    def _trip(self, cond_name: str, line: str) -> int:
+        m = _TRIP_RE.search(line)
+        if m:
+            return int(m.group(1))
+        consts = []
+        for ln in self.comps.get(cond_name, {}).get("lines", []):
+            consts += [int(x) for x in _CONST_RE.findall(ln)]
+        return max(consts) if consts else 1
+
+    # ------------------------------------------------------------------ #
+    def _effective_param_bytes(self, callee: str) -> float:
+        """Σ over callee params of min(full size, sliced access size)."""
+        if callee in self._eff_param_cache:
+            return self._eff_param_cache[callee]
+        comp = self.comps.get(callee)
+        if comp is None:
+            return 0.0
+        full = {p: _type_bytes_elems(t)[0] for p, t in comp["params"].items()}
+        sliced: dict[str, float] = {}
+        other_use: set = set()
+        for ln in comp["lines"]:
+            m = _INSTR_RE.match(ln)
+            if not m:
+                continue
+            _n, otype, op, rest = m.groups()
+            ops_ = _OPERAND_RE.findall(rest.split("), ")[0] + ")")
+            if op in ("dynamic-slice", "gather", "slice") and ops_ and ops_[0] in full:
+                ob = _type_bytes_elems(otype)[0]
+                sliced[ops_[0]] = sliced.get(ops_[0], 0.0) + ob
+                for o in ops_[1:]:
+                    if o in full:
+                        other_use.add(o)
+            else:
+                for o in ops_:
+                    if o in full:
+                        other_use.add(o)
+        total = 0.0
+        for p, fb in full.items():
+            if p in sliced and p not in other_use:
+                total += min(fb, sliced[p])
+            else:
+                total += fb
+        self._eff_param_cache[callee] = total
+        return total
+
+    def cost(self) -> dict:
+        memo: dict[str, tuple] = {}
+
+        def resolve(name: str, stack=()) -> tuple[dict, dict]:
+            if name in memo:
+                return memo[name]
+            if name not in self.comps or name in stack:
+                return {}, {}
+            comp = self.comps[name]
+            tab = self._symtab(comp)
+            flops: dict = defaultdict(float)
+            bytes_: dict = defaultdict(float)
+            in_fusion = comp["fusion_body"]
+
+            for ln in comp["lines"]:
+                m = _INSTR_RE.match(ln)
+                if not m:
+                    continue
+                _iname, otype, op, rest = m.groups()
+                ob, oe = _type_bytes_elems(otype)
+
+                if op == "while":
+                    wm = _WHILE_ATTR_RE.search(ln)
+                    if wm:
+                        trip = self._trip(wm.group(1), ln)
+                        bf, bb = resolve(wm.group(2), stack + (name,))
+                        for k, v in bf.items():
+                            flops[k] += v * trip
+                        for k, v in bb.items():
+                            bytes_[k] += v * trip
+                    continue
+                if op == "fusion":
+                    for callee in _CALLS_RE.findall(ln):
+                        cf, _cb = resolve(callee, stack + (name,))
+                        for k, v in cf.items():
+                            flops[k] += v
+                        # bytes: fusion kernel reads callee params, writes
+                        # out. A param consumed ONLY through dynamic-slice /
+                        # gather reads just the slice (charging the full
+                        # array would bill a scan's whole stacked input at
+                        # every step — 100x overcounts attention pair scans)
+                        bytes_["fusion"] += self._effective_param_bytes(callee) + ob
+                    continue
+                if op in ("call", "conditional", "async-start", "custom-call"):
+                    for callee in _CALLS_RE.findall(ln):
+                        cf, cb = resolve(callee, stack + (name,))
+                        for k, v in cf.items():
+                            flops[k] += v
+                        for k, v in cb.items():
+                            bytes_[k] += v
+                    continue
+                if op == "dot":
+                    operands = _OPERAND_RE.findall(rest.split("), ")[0] + ")")
+                    k = 1
+                    cd = _CDIMS_RE.search(ln)
+                    if cd and operands:
+                        lhs_t = tab.get(operands[0], "")
+                        dims = _shape_dims(lhs_t)
+                        for di in cd.group(1).split(","):
+                            if di and int(di) < len(dims):
+                                k *= dims[int(di)]
+                    flops["dot"] += 2.0 * oe * k
+                    if not in_fusion:
+                        opb = sum(_type_bytes_elems(tab.get(o, ""))[0] for o in operands[:2])
+                        bytes_["dot"] += opb + ob
+                    continue
+                if op in ("reduce", "reduce-window"):
+                    operands = _OPERAND_RE.findall(rest)
+                    ib = _type_bytes_elems(tab.get(operands[0], ""))[0] if operands else ob
+                    ie = _type_bytes_elems(tab.get(operands[0], ""))[1] if operands else oe
+                    flops["reduce"] += ie
+                    if not in_fusion:
+                        bytes_["reduce"] += ib + ob
+                    continue
+                if op in _COLLECTIVES:
+                    if not in_fusion:
+                        bytes_["collective"] += 2.0 * ob
+                    continue
+                if op in _ELEMENTWISE:
+                    flops["elementwise"] += oe
+                    if not in_fusion:
+                        n_ops = max(len(_OPERAND_RE.findall(rest)), 1)
+                        bytes_["elementwise"] += (n_ops + 1.0) * ob
+                    continue
+                if op in ("convert", "copy", "transpose", "reverse", "copy-start"):
+                    if not in_fusion:
+                        ops_ = _OPERAND_RE.findall(rest)
+                        ib = _type_bytes_elems(tab.get(ops_[0], ""))[0] if ops_ else ob
+                        bytes_["layout"] += ib + ob
+                    continue
+                if op in ("dynamic-update-slice",):
+                    ops_ = _OPERAND_RE.findall(rest)
+                    ub = _type_bytes_elems(tab.get(ops_[1], ""))[0] if len(ops_) > 1 else 0
+                    if not in_fusion:
+                        bytes_["slice"] += 2.0 * ub
+                    continue
+                if op in ("dynamic-slice", "slice", "gather", "scatter", "concatenate", "pad", "sort", "select-and-scatter"):
+                    if not in_fusion:
+                        bytes_["slice"] += 2.0 * ob
+                    continue
+                if op == "broadcast":
+                    if not in_fusion:
+                        bytes_["layout"] += ob
+                    continue
+                # _ZERO_COST and anything else: free
+
+            out = (dict(flops), dict(bytes_))
+            memo[name] = out
+            return out
+
+        f, b = resolve(self.entry) if self.entry else ({}, {})
+        return {
+            "flops": float(sum(f.values())),
+            "bytes": float(sum(b.values())),
+            "flops_by_op": {k: float(v) for k, v in f.items()},
+            "bytes_by_op": {k: float(v) for k, v in b.items()},
+        }
+
+
+def hlo_costs(text: str) -> dict:
+    return HloModule(text).cost()

@@ -1,0 +1,29 @@
+"""Production mesh construction.
+
+make_production_mesh() never touches jax device state at import time — the
+dry-run sets XLA_FLAGS=--xla_force_host_platform_device_count=512 before any
+jax import so the (2, 16, 16) multi-pod mesh (512 chips) and the (16, 16)
+single-pod mesh (256 chips) can be built on the CPU host.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(model_axis: int = 1):
+    """Small mesh over whatever devices exist (tests / CPU examples)."""
+    n = jax.device_count()
+    data = n // model_axis
+    return jax.make_mesh((data, model_axis), ("data", "model"))
+
+
+def mesh_chips(mesh) -> int:
+    return int(np.prod(list(mesh.shape.values())))

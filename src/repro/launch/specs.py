@@ -1,0 +1,84 @@
+"""Sharding-spec trees for every lowered program (train / prefill / decode).
+
+Everything is derived from the ParamDef trees — one source of truth — so the
+dry-run's in_shardings always structurally match the abstract inputs.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import defs as D
+from repro.models.model import Model
+from repro.models.sharding import batch_spec, logical_to_spec, repair_spec
+from repro.optim.adamw import AdamWConfig, Q8, q8_scale_shape
+from repro.train.train_step import TrainConfig
+
+
+def moment_specs(model: Model, mesh: Mesh, opt_cfg: AdamWConfig, fsdp_axes):
+    """Spec tree for one Adam moment (m or v), mirroring the param specs.
+    Q8 leaves get (codes=param_spec, scale=param_spec[:-1] + (None,))."""
+    ax = mesh.axis_names
+
+    def one(d: D.ParamDef):
+        spec = repair_spec(logical_to_spec(d.axes, ax, fsdp_axes), d.shape, mesh)
+        if not opt_cfg.int8_states:
+            return spec
+        entries = list(spec) + [None] * (len(d.shape) - len(spec))
+        sshape = q8_scale_shape(d.shape)
+        scale_spec = repair_spec(P(*entries[:-1], None), sshape, mesh) if len(d.shape) else P(None)
+        return Q8(codes=spec, scale=scale_spec)
+
+    return jax.tree.map(one, model.param_defs(), is_leaf=D.is_def)
+
+
+def train_state_specs(model: Model, mesh: Mesh, opt_cfg: AdamWConfig, tcfg: TrainConfig):
+    fsdp = model.fsdp_axes()
+    pspecs = model.specs(mesh, fsdp)
+    mom = moment_specs(model, mesh, opt_cfg, fsdp)
+    out = {
+        "params": pspecs,
+        "opt": {"m": mom, "v": mom, "step": P()},
+        "step": P(),
+    }
+    if tcfg.compress_grads:
+        out["ef_err"] = pspecs
+    return out
+
+
+def batch_specs(cfg: ModelConfig, mesh: Mesh, batch_abs: dict | None = None) -> dict:
+    tok_dims = 2 if cfg.audio else 1  # [B, S(, ncb)]
+    out = {
+        "tokens": batch_spec(mesh, tok_dims),
+        "labels": batch_spec(mesh, tok_dims),
+    }
+    if cfg.vision:
+        out["vision"] = batch_spec(mesh, 2)
+    if batch_abs is not None:
+        out = {k: repair_spec(out[k], batch_abs[k].shape, mesh) for k in out}
+    return out
+
+
+def abstract_batch(cfg: ModelConfig, shape: ShapeConfig, seq: int | None = None, batch: int | None = None) -> dict:
+    B = batch or shape.global_batch
+    S = seq or shape.seq_len
+    tshape = (B, S, cfg.audio.n_codebooks) if cfg.audio else (B, S)
+    out = {
+        "tokens": jax.ShapeDtypeStruct(tshape, jnp.int32),
+        "labels": jax.ShapeDtypeStruct(tshape, jnp.int32),
+    }
+    if cfg.vision:
+        out["vision"] = jax.ShapeDtypeStruct(
+            (B, cfg.vision.n_patches, cfg.vision.d_vision), jnp.float32
+        )
+    return out
+
+
+def as_shardings(mesh: Mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )

@@ -1,0 +1,15 @@
+"""Real JAX models for all 10 assigned architectures (DESIGN.md §4 role 2)."""
+from repro.models.defs import (  # noqa: F401
+    ParamDef,
+    abstract_params,
+    init_params,
+    param_bytes,
+    param_count,
+)
+from repro.models.model import Model, build_model  # noqa: F401
+from repro.models.sharding import (  # noqa: F401
+    activation_spec,
+    batch_spec,
+    param_shardings,
+    param_specs,
+)

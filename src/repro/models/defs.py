@@ -1,0 +1,103 @@
+"""Parameter-definition system: one declarative source of truth per model.
+
+A model's parameters are described as a pytree of ``ParamDef`` leaves
+(shape + logical axis names + initializer).  From that single tree we derive
+
+  * ``init_params``      — materialized arrays (smoke tests / real training),
+  * ``abstract_params``  — ShapeDtypeStructs (the dry-run lowers against these,
+                           so a 1T-param model never allocates),
+  * ``partition_specs``  — PartitionSpec tree from logical-axis rules
+                           (see models/sharding.py).
+
+Logical axis names used across the zoo:
+  "layers"   scan dimension over layers (never sharded)
+  "vocab"    vocabulary dim                  -> "model"
+  "heads"    attention-head dim (q)          -> "model"
+  "kv_heads" attention-head dim (kv)         -> "model"
+  "ff"       MLP hidden dim                  -> "model"
+  "experts"  MoE expert dim                  -> "model"  (expert parallelism)
+  "d_inner"  SSM channel dim                 -> "model"
+  "embed"    d_model dim                     -> FSDP axes when cfg.fsdp
+  "embed2"   second d_model-sized dim        -> never sharded (avoids 2D clash)
+  None       unsharded dim
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class ParamDef:
+    shape: tuple[int, ...]
+    axes: tuple[Optional[str], ...]  # logical axis name per dim
+    init: str = "normal"  # normal | zeros | ones | embed | ssm_a | conv
+    scale: float = 1.0  # fan-in override multiplier
+    dtype: Any = jnp.float32
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def is_def(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def _init_leaf(d: ParamDef, key: jax.Array) -> jax.Array:
+    if d.init == "zeros":
+        return jnp.zeros(d.shape, d.dtype)
+    if d.init == "ones":
+        return jnp.ones(d.shape, d.dtype)
+    if d.init == "ssm_a":
+        # mamba A_log init: log(1..16) tiled over the state dim
+        n = d.shape[-1]
+        a = jnp.tile(jnp.log(jnp.arange(1, n + 1, dtype=jnp.float32)), d.shape[:-1] + (1,))
+        return a.astype(d.dtype)
+    if d.init == "dt_bias":
+        # mamba dt bias: softplus^-1 of dt in [1e-3, 1e-1], log-uniform-ish
+        u = jnp.linspace(math.log(1e-3), math.log(1e-1), num=int(np.prod(d.shape)))
+        dt = jnp.exp(u).reshape(d.shape)
+        return (dt + jnp.log(-jnp.expm1(-dt))).astype(d.dtype)
+    # normal / embed: truncated-normal-ish with 1/sqrt(fan_in)
+    fan_in = d.shape[-2] if len(d.shape) >= 2 else d.shape[-1]
+    if d.init == "embed":
+        fan_in = 1.0
+    std = d.scale / math.sqrt(max(fan_in, 1))
+    return (std * jax.random.normal(key, d.shape, jnp.float32)).astype(d.dtype)
+
+
+def init_params(defs, key: jax.Array):
+    """Materialize a ParamDef tree into arrays (deterministic per-leaf keys)."""
+    leaves, treedef = jax.tree.flatten(defs, is_leaf=is_def)
+    keys = jax.random.split(key, len(leaves))
+    vals = [_init_leaf(d, k) for d, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def abstract_params(defs):
+    """ShapeDtypeStruct tree — zero allocation (dry-run path)."""
+    return jax.tree.map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, d.dtype), defs, is_leaf=is_def
+    )
+
+
+def param_count(defs) -> int:
+    return sum(int(np.prod(d.shape)) for d in jax.tree.leaves(defs, is_leaf=is_def))
+
+
+def param_bytes(defs) -> int:
+    return sum(
+        int(np.prod(d.shape)) * jnp.dtype(d.dtype).itemsize
+        for d in jax.tree.leaves(defs, is_leaf=is_def)
+    )
+
+
+def map_axes(defs, fn: Callable[[tuple], Any]):
+    """Apply ``fn(axes_tuple) -> spec`` over the def tree (spec derivation)."""
+    return jax.tree.map(lambda d: fn(d.axes), defs, is_leaf=is_def)

@@ -1,0 +1,402 @@
+"""Core neural-net layers shared by the whole zoo (pure JAX, functional).
+
+Attention has three execution paths, all numerically validated against
+``kernels.ref.reference_attention``:
+
+  * ``chunked_attention`` — pure-jnp flash-semantics attention: a lax.scan
+    over the *static list of causal (q_block, kv_block) pairs* with online
+    softmax. Computes exactly the lower-triangular half (no masked-block
+    waste), touches K/V once per q-block — the same FLOP/byte profile as a
+    flash kernel, so the multi-pod dry-run lowers this path and its
+    cost_analysis is honest. Portable to any backend.
+  * Pallas ``flash_attention`` (kernels/) — the TPU runtime path.
+  * ``decode_attention`` — single-query attention against a KV cache.
+
+Layout convention: activations are [B, S, d_model]; per-head tensors are
+[B, S, H, D] (transposed to [B, H, S, D] only inside attention).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -1e30  # finite mask bias: keeps every softmax intermediate finite
+
+
+@functools.lru_cache(maxsize=256)
+def _mm_vjp(subscripts: str):
+    """custom-VJP einsum: bf16 operands + f32 accumulation in BOTH passes.
+
+    Plain autodiff transposes an f32-accumulating einsum with an f32
+    cotangent, promoting the bf16 weight operand to f32 — and XLA then
+    hoists that convert BEFORE the ZeRO-3/TP all-gather, doubling every
+    weight/activation collective. The explicit backward keeps all dot
+    operands (cotangent included) in the compute dtype, which is also the
+    standard mixed-precision recipe on TPU."""
+    a, rest = subscripts.split(",")
+    b, c = rest.split("->")
+
+    @jax.custom_vjp
+    def f(x, w):
+        return jnp.einsum(subscripts, x, w, preferred_element_type=jnp.float32)
+
+    def fwd(x, w):
+        return f(x, w), (x, w)
+
+    def bwd(res, g):
+        x, w = res
+        g16 = g.astype(x.dtype)
+        dx = jnp.einsum(f"{c},{b}->{a}", g16, w.astype(x.dtype),
+                        preferred_element_type=jnp.float32).astype(x.dtype)
+        dw = jnp.einsum(f"{a},{c}->{b}", x, g16,
+                        preferred_element_type=jnp.float32).astype(w.dtype)
+        return dx, dw
+
+    f.defvjp(fwd, bwd)
+    return f
+
+
+def mm(subscripts: str, x: jax.Array, w: jax.Array, out_dtype=None) -> jax.Array:
+    """Matmul with bf16 operands + fp32 accumulation (MXU-native), output
+    cast back to the activation dtype. See _mm_vjp for why the backward is
+    explicit (§Perf hillclimb 2)."""
+    out = _mm_vjp(subscripts)(x, w.astype(x.dtype))
+    return out.astype(out_dtype or x.dtype)
+
+
+# --------------------------------------------------------------------------- #
+# norms / rope / mlp
+# --------------------------------------------------------------------------- #
+
+
+def rms_norm(x: jax.Array, gamma: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * gamma.astype(jnp.float32)).astype(dt)
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [B, S, H, D]; positions: [B, S] (int)."""
+    D = x.shape[-1]
+    freqs = rope_freqs(D, theta)  # [D/2]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [B, S, D/2]
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def mlp_act(gate: jax.Array, up: Optional[jax.Array], kind: str) -> jax.Array:
+    if kind == "swiglu":
+        return jax.nn.silu(gate.astype(jnp.float32)).astype(gate.dtype) * up
+    if kind == "gelu":
+        return jax.nn.gelu(gate)
+    if kind == "relu2":
+        r = jax.nn.relu(gate)
+        return r * r
+    raise ValueError(kind)
+
+
+# --------------------------------------------------------------------------- #
+# chunked (flash-semantics) attention — pure jnp, exact causal half
+# --------------------------------------------------------------------------- #
+
+
+def _pick_block(S: int, target: int) -> int:
+    """Largest divisor of S that is <= target (vision's 1601 = 7 x 229
+    patches won't divide a 512 block; blocks of 229 will)."""
+    b = min(target, S)
+    while S % b:
+        b -= 1
+    return b
+
+
+def _causal_pairs(nq: int, nk: int, block_q: int, block_k: int, causal: bool, off: int = 0):
+    """Static (qi, kj) block-pair list; causal keeps kj*bk <= qi_end + off."""
+    pairs = []
+    for qi in range(nq):
+        q_end = (qi + 1) * block_q - 1 + off
+        for kj in range(nk):
+            if causal and kj * block_k > q_end:
+                continue
+            pairs.append((qi, kj))
+    qis = np.array([p[0] for p in pairs], np.int32)
+    kjs = np.array([p[1] for p in pairs], np.int32)
+    return qis, kjs
+
+
+def _chunked_attention_fwd_impl(q, k, v, *, causal, scale, block_q, block_k, kv_len=None):
+    """Pair-list scan forward. Returns (out, lse [B,Hq,Sq])."""
+    out, lse = _chunked_attention_core(
+        q, k, v, causal=causal, scale=scale, block_q=block_q, block_k=block_k, kv_len=kv_len
+    )
+    return out, lse
+
+
+def chunked_attention(
+    q: jax.Array,  # [B, Hq, Sq, D]
+    k: jax.Array,  # [B, Hkv, Skv, D]
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    scale: Optional[float] = None,
+    block_q: int = 512,
+    block_k: int = 512,
+    kv_len: Optional[int] = None,  # static valid KV prefix (padded tail masked)
+) -> jax.Array:
+    """Flash-semantics attention with a flash-style custom VJP: the backward
+    saves only (q, k, v, out, lse) and recomputes score blocks — plain
+    autodiff-of-scan would checkpoint the full accumulator at every pair
+    step (~tens of GB/layer at 4k seq).
+
+    When Skv has no usable divisor (vision's 1601 patches are PRIME — an
+    unpadded block search degrades to block_k=1 and a 102k-step scan), K/V
+    are padded to a block multiple and masked via ``kv_len``."""
+    Skv = k.shape[2]
+    bk = _pick_block(Skv, block_k)
+    if bk < min(block_k, 128) and Skv > 128:  # pathological divisor: pad
+        padded = -(-Skv // min(block_k, Skv)) * min(block_k, Skv)
+        cfgpad = [(0, 0), (0, 0), (0, padded - Skv), (0, 0)]
+        k = jnp.pad(k, cfgpad)
+        v = jnp.pad(v, cfgpad)
+        kv_len = Skv if kv_len is None else kv_len
+    f = _chunked_attention_vjp(causal, scale if scale is not None else q.shape[-1] ** -0.5,
+                               _pick_block(q.shape[2], block_q),
+                               _pick_block(k.shape[2], block_k), kv_len)
+    return f(q, k, v)
+
+
+@functools.lru_cache(maxsize=64)
+def _chunked_attention_vjp(causal: bool, scale: float, block_q: int, block_k: int,
+                           kv_len: Optional[int] = None):
+    kw = dict(causal=causal, scale=scale, block_q=block_q, block_k=block_k, kv_len=kv_len)
+
+    def fwd_only(q, k, v):
+        out, _ = _chunked_attention_fwd_impl(q, k, v, **kw)
+        return out
+
+    @jax.custom_vjp
+    def attn(q, k, v):
+        return fwd_only(q, k, v)
+
+    def attn_fwd(q, k, v):
+        out, lse = _chunked_attention_fwd_impl(q, k, v, **kw)
+        return out, (q, k, v, out, lse)
+
+    def attn_bwd(res, do):
+        q, k, v, out, lse = res
+        dq, dk, dv = _chunked_attention_bwd_impl(q, k, v, out, lse, do, **kw)
+        return dq, dk, dv
+
+    attn.defvjp(attn_fwd, attn_bwd)
+    return attn
+
+
+def _chunked_attention_core(
+    q: jax.Array,  # [B, Hq, Sq, D]
+    k: jax.Array,  # [B, Hkv, Skv, D]
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    scale: Optional[float] = None,
+    block_q: int = 512,
+    block_k: int = 512,
+    kv_len: Optional[int] = None,
+):
+    B, Hq, Sq, D = q.shape
+    _, Hkv, Skv, _ = k.shape
+    group = Hq // Hkv
+    scale = scale if scale is not None else D ** -0.5
+    block_q = _pick_block(Sq, block_q)
+    block_k = _pick_block(Skv, block_k)
+    nq, nk = Sq // block_q, Skv // block_k
+    # causal offset: query position p attends key positions <= p + (Skv - Sq)
+    off = Skv - Sq
+
+    qis, kjs = _causal_pairs(nq, nk, block_q, block_k, causal, off)
+    qis, kjs = jnp.asarray(qis), jnp.asarray(kjs)
+
+    qb = q.reshape(B, Hkv, group, nq, block_q, D)  # blocked, GQA-grouped
+    kb = k.reshape(B, Hkv, nk, block_k, D)
+    vb = v.reshape(B, Hkv, nk, block_k, D)
+
+    acc0 = jnp.zeros((nq, B, Hkv, group, block_q, D), jnp.float32)
+    m0 = jnp.full((nq, B, Hkv, group, block_q), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((nq, B, Hkv, group, block_q), jnp.float32)
+
+    def step(carry, idx):
+        acc, m, l = carry
+        qi, kj = idx
+        qt = jax.lax.dynamic_index_in_dim(qb, qi, 3, keepdims=False)  # [B,Hkv,G,bq,D]
+        kt = jax.lax.dynamic_index_in_dim(kb, kj, 2, keepdims=False)  # [B,Hkv,bk,D]
+        vt = jax.lax.dynamic_index_in_dim(vb, kj, 2, keepdims=False)
+        s = jnp.einsum(
+            "bhgqd,bhkd->bhgqk",
+            qt.astype(jnp.float32),
+            kt.astype(jnp.float32),
+            preferred_element_type=jnp.float32,
+        ) * scale
+        if causal or kv_len is not None:
+            # arithmetic mask bias (NO predicate tensors): XLA hoists
+            # loop-"invariant" mask computations out of the pair scan at the
+            # broadcast shape — a where(pred,...) here materializes a
+            # [pairs, B, H, bq, bk] pred buffer (9.7 GB at 4k seq). The f32
+            # bias hoists at [pairs, bq, bk] (a few MB) and fuses into the add.
+            qpos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+            kpos = kj * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+            bias = jnp.zeros((block_q, block_k), jnp.float32)
+            if causal:
+                bias = bias + jnp.clip((kpos - qpos - off).astype(jnp.float32), 0.0, 1.0) * NEG_INF
+            if kv_len is not None:  # padded KV tail
+                bias = bias + jnp.clip((kpos - (kv_len - 1)).astype(jnp.float32), 0.0, 1.0) * NEG_INF
+            s = s + bias
+
+        m_prev = jax.lax.dynamic_index_in_dim(m, qi, 0, keepdims=False)
+        l_prev = jax.lax.dynamic_index_in_dim(l, qi, 0, keepdims=False)
+        a_prev = jax.lax.dynamic_index_in_dim(acc, qi, 0, keepdims=False)
+        m_cur = jnp.max(s, axis=-1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        # finite NEG_INF bias keeps every intermediate finite: exp(-inf-gap)
+        # guards are unnecessary (m starts at -inf but kj=0 is always the
+        # first pair per q block, making m finite from step one)
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = alpha * l_prev + jnp.sum(p, axis=-1)
+        a_new = a_prev * alpha[..., None] + jnp.einsum(
+            "bhgqk,bhkd->bhgqd", p, vt.astype(jnp.float32),
+            preferred_element_type=jnp.float32,
+        )
+        acc = jax.lax.dynamic_update_index_in_dim(acc, a_new, qi, 0)
+        m = jax.lax.dynamic_update_index_in_dim(m, m_new, qi, 0)
+        l = jax.lax.dynamic_update_index_in_dim(l, l_new, qi, 0)
+        return (acc, m, l), None
+
+    # checkpoint the pair step: without this, backward-of-scan saves every
+    # step's s/p matrices and causal-mask predicates ([pairs, B, H, bq, bk]
+    # — tens of GB at 4k seq); recomputing them from the tiny slices is free
+    (acc, m, l), _ = jax.lax.scan(jax.checkpoint(step), (acc0, m0, l0), (qis, kjs))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    out = jnp.moveaxis(out, 0, 3)  # [B,Hkv,G,nq,bq,D]
+    lse = m + jnp.log(jnp.maximum(l, 1e-30))  # [nq,B,Hkv,G,bq]
+    lse = jnp.moveaxis(lse, 0, 3).reshape(B, Hq, Sq)
+    return out.reshape(B, Hq, Sq, D).astype(q.dtype), lse
+
+
+def _chunked_attention_bwd_impl(
+    q, k, v, out, lse, do, *, causal, scale, block_q, block_k, kv_len=None
+):
+    """Flash-attention backward: recompute P per block pair from (q,k,lse),
+    accumulate dq/dk/dv. No per-step residuals beyond the carries."""
+    B, Hq, Sq, D = q.shape
+    _, Hkv, Skv, _ = k.shape
+    group = Hq // Hkv
+    nq, nk = Sq // block_q, Skv // block_k
+    off = Skv - Sq
+    qis, kjs = _causal_pairs(nq, nk, block_q, block_k, causal, off)
+    qis, kjs = jnp.asarray(qis), jnp.asarray(kjs)
+
+    qf = q.astype(jnp.float32).reshape(B, Hkv, group, nq, block_q, D)
+    kf = k.astype(jnp.float32).reshape(B, Hkv, nk, block_k, D)
+    vf = v.astype(jnp.float32).reshape(B, Hkv, nk, block_k, D)
+    dof = do.astype(jnp.float32).reshape(B, Hkv, group, nq, block_q, D)
+    outf = out.astype(jnp.float32).reshape(B, Hkv, group, nq, block_q, D)
+    lseb = lse.reshape(B, Hkv, group, nq, block_q)
+    # Di = rowsum(dO * O)
+    Di = jnp.sum(dof * outf, axis=-1)  # [B,Hkv,G,nq,bq]
+
+    dq0 = jnp.zeros_like(qf)
+    dk0 = jnp.zeros_like(kf)
+    dv0 = jnp.zeros_like(vf)
+
+    def step(carry, idx):
+        dq, dk, dv = carry
+        qi, kj = idx
+        qt = jax.lax.dynamic_index_in_dim(qf, qi, 3, keepdims=False)  # [B,H,G,bq,D]
+        kt = jax.lax.dynamic_index_in_dim(kf, kj, 2, keepdims=False)  # [B,H,bk,D]
+        vt = jax.lax.dynamic_index_in_dim(vf, kj, 2, keepdims=False)
+        dot = jax.lax.dynamic_index_in_dim(dof, qi, 3, keepdims=False)
+        lset = jax.lax.dynamic_index_in_dim(lseb, qi, 3, keepdims=False)  # [B,H,G,bq]
+        dit = jax.lax.dynamic_index_in_dim(Di, qi, 3, keepdims=False)
+
+        s = jnp.einsum("bhgqd,bhkd->bhgqk", qt, kt, preferred_element_type=jnp.float32) * scale
+        if causal or kv_len is not None:
+            qpos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+            kpos = kj * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+            if causal:
+                s = s + jnp.clip((kpos - qpos - off).astype(jnp.float32), 0.0, 1.0) * NEG_INF
+            if kv_len is not None:
+                s = s + jnp.clip((kpos - (kv_len - 1)).astype(jnp.float32), 0.0, 1.0) * NEG_INF
+        p = jnp.exp(s - lset[..., None])  # [B,H,G,bq,bk]
+        dvt = jnp.einsum("bhgqk,bhgqd->bhkd", p, dot)
+        dp = jnp.einsum("bhgqd,bhkd->bhgqk", dot, vt)
+        ds = p * (dp - dit[..., None]) * scale
+        dqt = jnp.einsum("bhgqk,bhkd->bhgqd", ds, kt)
+        dkt = jnp.einsum("bhgqk,bhgqd->bhkd", ds, qt)
+        dq = dq.at[:, :, :, qi].add(dqt)
+        dk = dk.at[:, :, kj].add(dkt)
+        dv = dv.at[:, :, kj].add(dvt)
+        return (dq, dk, dv), None
+
+    (dq, dk, dv), _ = jax.lax.scan(jax.checkpoint(step), (dq0, dk0, dv0), (qis, kjs))
+    return (
+        dq.reshape(B, Hq, Sq, D).astype(q.dtype),
+        dk.reshape(B, Hkv, Skv, D).astype(k.dtype),
+        dv.reshape(B, Hkv, Skv, D).astype(v.dtype),
+    )
+
+
+def decode_attention(
+    q: jax.Array,  # [B, Hq, 1, D]
+    k: jax.Array,  # [B, Hkv, Skv, D]  (cache, padded)
+    v: jax.Array,
+    cache_len: jax.Array,  # [B] or scalar: valid prefix length
+    *,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    B, Hq, _, D = q.shape
+    _, Hkv, Skv, _ = k.shape
+    group = Hq // Hkv
+    scale = scale if scale is not None else D ** -0.5
+    qg = q.reshape(B, Hkv, group, D)
+    s = jnp.einsum(
+        "bhgd,bhkd->bhgk", qg.astype(jnp.float32), k.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    ) * scale
+    pos = jnp.arange(Skv)[None, None, None, :]
+    valid = pos < jnp.reshape(cache_len, (-1, 1, 1, 1))
+    s = jnp.where(valid, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum(
+        "bhgk,bhkd->bhgd", p, v.astype(jnp.float32), preferred_element_type=jnp.float32
+    )
+    return out.reshape(B, Hq, 1, D).astype(q.dtype)
+
+
+def attention(
+    q: jax.Array,  # [B, S, Hq, D]
+    k: jax.Array,  # [B, S, Hkv, D]
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    use_flash: bool = False,
+    block_q: int = 512,
+    block_k: int = 512,
+) -> jax.Array:
+    """Dispatch [B,S,H,D] tensors to the right attention path."""
+    qt, kt, vt = (jnp.swapaxes(x, 1, 2) for x in (q, k, v))
+    if use_flash:
+        from repro.kernels import flash_attention
+
+        o = flash_attention(qt, kt, vt, causal=causal, block_q=block_q, block_k=block_k)
+    else:
+        o = chunked_attention(qt, kt, vt, causal=causal, block_q=block_q, block_k=block_k)
+    return jnp.swapaxes(o, 1, 2)

@@ -1,0 +1,208 @@
+"""Mamba1 (selective scan) and Mamba2 (SSD) blocks, train + decode paths.
+
+Train-time scans are *chunked*: an associative scan inside fixed-size chunks
+(parallel, MXU/VPU-friendly) with a lax.scan carrying the SSM state across
+chunks — the standard hardware-efficient formulation, and the only one whose
+activation footprint fits HBM at seq 4k x batch 256 (a full associative scan
+over time would materialize T x B x d_inner x d_state).
+
+Decode is the exact single-step recurrence (O(1) per token) — this is what
+makes the ``long_500k`` cell runnable for the SSM/hybrid archs.
+
+Numerics: state math in fp32 throughout; parameters fp32; activations cast
+to the model dtype at block boundaries.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import rms_norm
+
+
+# --------------------------------------------------------------------------- #
+# depthwise causal conv1d (window d_conv) + single-step update
+# --------------------------------------------------------------------------- #
+
+
+def causal_conv1d(x: jax.Array, w: jax.Array, b: Optional[jax.Array]) -> jax.Array:
+    """x: [B, S, C]; w: [K, C] depthwise kernel; causal (left) padding."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for i in range(K):  # K is 4: unrolled adds beat a conv op for this window
+        out = out + xp[:, i : i + x.shape[1], :].astype(jnp.float32) * w[i].astype(jnp.float32)
+    if b is not None:
+        out = out + b.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def conv_step(x_t: jax.Array, conv_buf: jax.Array, w: jax.Array, b: Optional[jax.Array]):
+    """Single decode step. x_t: [B, C]; conv_buf: [B, K-1, C] (past inputs).
+    Returns (y_t [B, C], new_buf)."""
+    K = w.shape[0]
+    window = jnp.concatenate([conv_buf, x_t[:, None, :]], axis=1)  # [B, K, C]
+    y = jnp.einsum("bkc,kc->bc", window.astype(jnp.float32), w.astype(jnp.float32))
+    if b is not None:
+        y = y + b.astype(jnp.float32)
+    return y.astype(x_t.dtype), window[:, 1:, :]
+
+
+# --------------------------------------------------------------------------- #
+# Mamba1 selective scan (diagonal A), chunked associative scan
+# --------------------------------------------------------------------------- #
+
+
+def selective_scan(
+    u: jax.Array,  # [B, S, C]       input (post conv + silu)
+    dt: jax.Array,  # [B, S, C]      per-channel timestep (post softplus)
+    A: jax.Array,  # [C, N]          negative (=-exp(A_log))
+    Bm: jax.Array,  # [B, S, N]
+    Cm: jax.Array,  # [B, S, N]
+    D: jax.Array,  # [C]
+    chunk: int = 64,
+    state0: Optional[jax.Array] = None,  # [B, C, N]
+):
+    """Returns (y [B, S, C], final_state [B, C, N]).
+
+    Recurrence per (channel c, state n):
+      s_t = exp(dt_t A_cn) s_{t-1} + dt_t B_tn u_tc ;   y_tc = sum_n C_tn s_tn + D_c u_tc
+    """
+    B_, S, C = u.shape
+    N = A.shape[1]
+    assert S % chunk == 0, (S, chunk)
+    nchunks = S // chunk
+
+    uf = u.astype(jnp.float32).reshape(B_, nchunks, chunk, C)
+    dtf = dt.astype(jnp.float32).reshape(B_, nchunks, chunk, C)
+    Bf = Bm.astype(jnp.float32).reshape(B_, nchunks, chunk, N)
+    Cf = Cm.astype(jnp.float32).reshape(B_, nchunks, chunk, N)
+    Af = A.astype(jnp.float32)
+
+    def chunk_step(state, xs):  # state: [B, C, N]
+        uc, dtc, Bc, Cc = xs  # [B, chunk, C], ..., [B, chunk, N]
+        # per-step decay a_t = exp(dt A) [B,chunk,C,N]; input b_t = dt B u
+        dA = dtc[..., None] * Af[None, None]  # [B,chunk,C,N]
+        a = jnp.exp(dA)
+        b = (dtc * uc)[..., None] * Bc[:, :, None, :]  # [B,chunk,C,N]
+
+        # associative scan over the chunk: (a, b) o (a', b') = (a a', a' b + b')
+        def comb(l, r):
+            return (l[0] * r[0], r[0] * l[1] + r[1])
+
+        a_cum, b_cum = jax.lax.associative_scan(comb, (a, b), axis=1)
+        s = a_cum * state[:, None] + b_cum  # [B,chunk,C,N]
+        y = jnp.einsum("btcn,btn->btc", s, Cc)
+        return s[:, -1], y
+
+    state = state0.astype(jnp.float32) if state0 is not None else jnp.zeros((B_, C, N), jnp.float32)
+    xs = (
+        jnp.moveaxis(uf, 1, 0),
+        jnp.moveaxis(dtf, 1, 0),
+        jnp.moveaxis(Bf, 1, 0),
+        jnp.moveaxis(Cf, 1, 0),
+    )
+    # checkpoint: the [B, chunk, C, N] decay/cumsum intermediates dominate
+    # activation memory if saved per chunk step
+    state, ys = jax.lax.scan(jax.checkpoint(chunk_step), state, xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(B_, S, C)
+    y = y + u.astype(jnp.float32) * D.astype(jnp.float32)
+    return y.astype(u.dtype), state
+
+
+def selective_scan_step(
+    u_t: jax.Array,  # [B, C]
+    dt_t: jax.Array,  # [B, C]
+    A: jax.Array,  # [C, N]
+    B_t: jax.Array,  # [B, N]
+    C_t: jax.Array,  # [B, N]
+    D: jax.Array,  # [C]
+    state: jax.Array,  # [B, C, N] fp32
+):
+    uf, dtf = u_t.astype(jnp.float32), dt_t.astype(jnp.float32)
+    a = jnp.exp(dtf[..., None] * A[None])  # [B,C,N]
+    b = (dtf * uf)[..., None] * B_t[:, None, :]
+    state = a * state + b
+    y = jnp.einsum("bcn,bn->bc", state, C_t.astype(jnp.float32)) + uf * D
+    return y.astype(u_t.dtype), state
+
+
+# --------------------------------------------------------------------------- #
+# Mamba2 SSD (scalar-per-head decay), chunked — jnp path + single step
+# --------------------------------------------------------------------------- #
+
+
+def ssd_scan(
+    x: jax.Array,  # [B, S, H, P]
+    dt: jax.Array,  # [B, S, H]     (post softplus)
+    A: jax.Array,  # [H]           negative
+    Bm: jax.Array,  # [B, S, N]
+    Cm: jax.Array,  # [B, S, N]
+    chunk: int = 64,
+    state0: Optional[jax.Array] = None,  # [B, H, N, P]
+):
+    """Chunked SSD (Mamba2): intra-chunk attention-like matmuls + inter-chunk
+    state carry. Exactly equals the per-step recurrence (kernels/ref.py)."""
+    B_, S, H, P = x.shape
+    N = Bm.shape[-1]
+    assert S % chunk == 0
+    nc = S // chunk
+
+    xf = x.astype(jnp.float32).reshape(B_, nc, chunk, H, P)
+    dtf = dt.astype(jnp.float32).reshape(B_, nc, chunk, H)
+    Bf = Bm.astype(jnp.float32).reshape(B_, nc, chunk, N)
+    Cf = Cm.astype(jnp.float32).reshape(B_, nc, chunk, N)
+    Af = A.astype(jnp.float32)
+
+    def chunk_step(state, xs):  # state [B, H, N, P]
+        xc, dtc, Bc, Cc = xs
+        dA = dtc * Af[None, None]  # [B,chunk,H]
+        cum = jnp.cumsum(dA, axis=1)  # [B,chunk,H] log-decay from chunk start
+        total = cum[:, -1]  # [B,H]
+
+        # contribution of the carried-in state: y_in[t] = exp(cum_t) C_t . state
+        y_in = jnp.einsum("bth,btn,bhnp->bthp", jnp.exp(cum), Cc, state)
+
+        # intra-chunk: y_intra[t] = sum_{s<=t} exp(cum_t - cum_s) dt_s (C_t.B_s) x_s
+        li = cum[:, :, None, :] - cum[:, None, :, :]  # [B,t,s,H]
+        mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+        decay = jnp.where(mask[None, :, :, None], jnp.exp(li), 0.0)
+        cb = jnp.einsum("btn,bsn->bts", Cc, Bc)  # [B,t,s]
+        w = decay * cb[..., None] * dtc[:, None, :, :]  # [B,t,s,H]
+        y_intra = jnp.einsum("btsh,bshp->bthp", w, xc)
+
+        # state update: s' = exp(total) s + sum_s exp(total - cum_s) dt_s B_s x_s
+        g = jnp.exp(total[:, None] - cum)  # [B,chunk,H]
+        ds = jnp.einsum("bsh,bsn,bshp->bhnp", g * dtc, Bc, xc)
+        state = jnp.exp(total)[..., None, None] * state + ds
+        return state, y_in + y_intra
+
+    state = state0.astype(jnp.float32) if state0 is not None else jnp.zeros((B_, H, N, P), jnp.float32)
+    xs = (
+        jnp.moveaxis(xf, 1, 0),
+        jnp.moveaxis(dtf, 1, 0),
+        jnp.moveaxis(Bf, 1, 0),
+        jnp.moveaxis(Cf, 1, 0),
+    )
+    # checkpoint: the [B, t, s, H] intra-chunk decay tensor is the big one
+    state, ys = jax.lax.scan(jax.checkpoint(chunk_step), state, xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(B_, S, H, P)
+    return y.astype(x.dtype), state
+
+
+def ssd_step(
+    x_t: jax.Array,  # [B, H, P]
+    dt_t: jax.Array,  # [B, H]
+    A: jax.Array,  # [H]
+    B_t: jax.Array,  # [B, N]
+    C_t: jax.Array,  # [B, N]
+    state: jax.Array,  # [B, H, N, P] fp32
+):
+    decay = jnp.exp(dt_t.astype(jnp.float32) * A[None])  # [B,H]
+    upd = dt_t[..., None, None] * B_t[:, None, :, None] * x_t[:, :, None, :]
+    state = decay[..., None, None] * state + upd.astype(jnp.float32)
+    y = jnp.einsum("bn,bhnp->bhp", C_t.astype(jnp.float32), state)
+    return y.astype(x_t.dtype), state

@@ -1,0 +1,616 @@
+"""The Model API: build_model(cfg) -> Model with loss / prefill / decode_step.
+
+All methods are pure functions of (params, inputs) suitable for jit/pjit;
+``mesh`` only adds with_sharding_constraint annotations (no-op on 1 device).
+
+Scan/remat structure (drives both compile time and the HBM footprint that
+``compiled.memory_analysis()`` reports in the dry-run):
+  * homogeneous layer stacks  -> lax.scan over stacked params
+  * periodic patterns (VLM 4 self + 1 cross; zamba2 k mamba + shared attn)
+    -> scan over groups, inner scan over the homogeneous run
+  * cfg.remat: "full" checkpoints each scan body (save only the residual
+    stream), "dots" saves matmul outputs, "none" disables.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import defs as D
+from repro.models import ssm_models as S
+from repro.models import transformer as T
+from repro.models.layers import apply_rope, attention, decode_attention, mlp_act, mm, rms_norm
+from repro.models.sharding import constrain, param_specs
+
+
+def _remat(fn, mode: str):
+    if mode == "none":
+        return fn
+    if mode == "dots":
+        pol = jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        return jax.checkpoint(fn, policy=pol)
+    return jax.checkpoint(fn)  # full
+
+
+# numerics-sensitive leaves stay fp32; everything else is pre-cast to the
+# compute dtype BEFORE the layer scan so ZeRO-3 all-gathers and HBM weight
+# reads move bf16, not fp32 (§Perf hillclimb 1, iteration 2: halves both)
+_KEEP_F32 = {"norm", "ln1", "ln2", "norm_g", "final_norm", "A_log", "dt_bias",
+             "D", "conv_b", "conv_w", "attn_gate", "mlp_gate", "router"}
+
+
+def cast_layer_params(cfg: ModelConfig, tree: dict) -> dict:
+    dt = jnp.dtype(cfg.dtype)
+
+    def cast(k, x):
+        if k in _KEEP_F32 or x.dtype != jnp.float32:
+            return x
+        return x.astype(dt)
+
+    return {k: cast(k, v) for k, v in tree.items()}
+
+
+def _precast(cfg: ModelConfig, params: dict) -> dict:
+    out = dict(params)
+    for key in ("layers", "shared", "cross_layers"):
+        if key in params:
+            out[key] = cast_layer_params(cfg, params[key])
+    if "lm_head" in params and params["lm_head"].dtype == jnp.float32:
+        out["lm_head"] = params["lm_head"].astype(jnp.dtype(cfg.dtype))
+    return out
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# --------------------------------------------------------------------------- #
+# zamba2 shared attention block (full-seq + decode)
+# --------------------------------------------------------------------------- #
+
+
+def _shared_block(cfg: ModelConfig, sp: dict, h, h0, positions, mesh):
+    """Full-sequence shared block. Returns (h_new, (k, v))."""
+    xin = jnp.concatenate([h, h0], axis=-1)  # [B, S, 2d]
+    x = rms_norm(xin, sp["ln1"], cfg.norm_eps)
+    q = mm("bsd,dhk->bshk", x, sp["wq"])
+    k = mm("bsd,dhk->bshk", x, sp["wk"])
+    v = mm("bsd,dhk->bshk", x, sp["wv"])
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    q = constrain(q, mesh, ("pod", "data"), None, "model", None)
+    o = attention(q, k, v, causal=True, use_flash=False)
+    a = mm("bshk,hkd->bsd", o, sp["wo"].reshape(cfg.n_heads, cfg.hd, -1))
+    h = h + a
+    x2 = rms_norm(h, sp["ln2"], cfg.norm_eps)
+    g = mm("bsd,df->bsf", x2, sp["w_gate"])
+    u = mm("bsd,df->bsf", x2, sp["w_up"])
+    m = mm("bsf,fd->bsd", T.mlp_act(g, u, "swiglu"), sp["w_down"])
+    return h + m, (k, v)
+
+
+def _shared_block_decode(cfg: ModelConfig, sp: dict, h, h0, k_cache, v_cache, lens, mesh, seq_shard=False):
+    B = h.shape[0]
+    xin = jnp.concatenate([h, h0], axis=-1)
+    x = rms_norm(xin, sp["ln1"], cfg.norm_eps)
+    q = mm("bsd,dhk->bshk", x, sp["wq"])
+    k = mm("bsd,dhk->bshk", x, sp["wk"])
+    v = mm("bsd,dhk->bshk", x, sp["wv"])
+    pos = jnp.reshape(lens, (B, 1))
+    q = apply_rope(q, pos, cfg.rope_theta)
+    k = apply_rope(k, pos, cfg.rope_theta)
+    bidx = jnp.arange(B)
+    k_cache = k_cache.at[bidx, lens].set(k[:, 0].astype(k_cache.dtype), mode="drop")
+    v_cache = v_cache.at[bidx, lens].set(v[:, 0].astype(v_cache.dtype), mode="drop")
+    cache_axes = (None, ("pod", "data"), "model", None) if seq_shard else (("pod", "data"), None, "model", None)
+    k_cache = constrain(k_cache, mesh, *cache_axes)
+    v_cache = constrain(v_cache, mesh, *cache_axes)
+    o = decode_attention(
+        jnp.swapaxes(q, 1, 2), jnp.swapaxes(k_cache, 1, 2).astype(q.dtype),
+        jnp.swapaxes(v_cache, 1, 2).astype(q.dtype), lens + 1,
+    )
+    a = mm("bshk,hkd->bsd", jnp.swapaxes(o, 1, 2), sp["wo"].reshape(cfg.n_heads, cfg.hd, -1))
+    h = h + a
+    x2 = rms_norm(h, sp["ln2"], cfg.norm_eps)
+    g = mm("bsd,df->bsf", x2, sp["w_gate"])
+    u = mm("bsd,df->bsf", x2, sp["w_up"])
+    m = mm("bsf,fd->bsd", T.mlp_act(g, u, "swiglu"), sp["w_down"])
+    return h + m, k_cache, v_cache
+
+
+# --------------------------------------------------------------------------- #
+# Model
+# --------------------------------------------------------------------------- #
+
+
+@dataclass
+class Model:
+    cfg: ModelConfig
+
+    # ------------------------------------------------------------- params --
+    def param_defs(self) -> dict:
+        cfg = self.cfg
+        if cfg.family in ("dense", "audio", "vlm", "moe"):
+            defs = T.transformer_defs(cfg)
+        elif cfg.family == "ssm":
+            defs = {
+                "embed": D.ParamDef((1, cfg.vocab_size, cfg.d_model), (None, "vocab", "embed"), "embed", 0.02),
+                "final_norm": D.ParamDef((cfg.d_model,), (None,), "ones"),
+                "lm_head": D.ParamDef((1, cfg.d_model, cfg.vocab_size), (None, "embed", "vocab")),
+                "layers": S.mamba1_defs(cfg),
+            }
+        elif cfg.family == "hybrid":
+            defs = {
+                "embed": D.ParamDef((1, cfg.vocab_size, cfg.d_model), (None, "vocab", "embed"), "embed", 0.02),
+                "final_norm": D.ParamDef((cfg.d_model,), (None,), "ones"),
+                "lm_head": D.ParamDef((1, cfg.d_model, cfg.vocab_size), (None, "embed", "vocab")),
+                "layers": S.mamba2_defs(cfg, cfg.n_layers),
+                "shared": S.shared_block_defs(cfg),
+            }
+        else:
+            raise ValueError(cfg.family)
+        if cfg.param_dtype != "float32":
+            # weight matrices stored reduced-precision; norms/biases/SSM
+            # constants stay fp32 for numerics
+            pd = jnp.dtype(cfg.param_dtype)
+            defs = jax.tree.map(
+                lambda d: (
+                    D.ParamDef(d.shape, d.axes, d.init, d.scale, pd)
+                    if d.init in ("normal", "embed") else d
+                ),
+                defs,
+                is_leaf=D.is_def,
+            )
+        return defs
+
+    def init(self, key: jax.Array):
+        return D.init_params(self.param_defs(), key)
+
+    def abstract_params(self):
+        return D.abstract_params(self.param_defs())
+
+    def param_count(self) -> int:
+        return D.param_count(self.param_defs())
+
+    def specs(self, mesh, fsdp_axes=None):
+        if fsdp_axes is None:
+            fsdp_axes = self.fsdp_axes()
+        return param_specs(self.param_defs(), mesh, fsdp_axes)
+
+    def fsdp_axes(self) -> tuple:
+        from repro.models.sharding import fsdp_axes_for
+
+        return fsdp_axes_for(self.cfg)
+
+    # ------------------------------------------------------------ forward --
+    def forward(self, params, tokens, *, vision=None, mesh=None, collect_cache=False,
+                max_len=0, head=True):
+        """Full-sequence forward. tokens [B,S(,ncb)]; returns (logits, aux, caches)
+        — or (hidden, aux, caches) when head=False (the loss path computes
+        logits chunk-wise instead; see transformer.chunked_xent).
+        """
+        cfg = self.cfg
+        dt = _dtype(cfg)
+        B, Sq = tokens.shape[:2]
+        params = _precast(cfg, params)
+        h = T.embed_tokens(cfg, params, tokens, dt)
+        h = constrain(h, mesh, ("pod", "data"), None, "model")
+        positions = jnp.broadcast_to(jnp.arange(Sq)[None], (B, Sq))
+        aux = {"moe_aux": jnp.float32(0.0), "moe_z": jnp.float32(0.0)}
+        caches: dict = {}
+
+        if cfg.family in ("dense", "audio"):
+            def body(hh, lp):
+                a, kv = T.self_attn_block(cfg, lp, hh, positions, mesh)
+                hh = hh + a
+                hh = hh + T.mlp_block(cfg, lp, hh, mesh)
+                hh = constrain(hh, mesh, ("pod", "data"), None, "model")
+                return hh, kv if collect_cache else None
+
+            h, ys = jax.lax.scan(_remat(body, cfg.remat), h, params["layers"])
+            if collect_cache:
+                caches["k"], caches["v"] = ys
+
+        elif cfg.family == "moe":
+            def body(hh, lp):
+                a, kv = T.self_attn_block(cfg, lp, hh, positions, mesh)
+                hh = hh + a
+                m, la, lz = T.moe_block(cfg, lp, hh, mesh)
+                hh = hh + m
+                hh = constrain(hh, mesh, ("pod", "data"), None, "model")
+                return hh, ((la, lz) if not collect_cache else (la, lz, kv))
+
+            h, ys = jax.lax.scan(_remat(body, cfg.remat), h, params["layers"])
+            if collect_cache:
+                la, lz, kv = ys
+                caches["k"], caches["v"] = kv
+            else:
+                la, lz = ys
+            aux["moe_aux"], aux["moe_z"] = jnp.mean(la), jnp.mean(lz)
+
+        elif cfg.family == "vlm":
+            k = cfg.vision.cross_attn_every
+            n_cross = cfg.n_layers // k
+            vis = mm("bpe,ed->bpd", vision.astype(dt), params["patch_proj"])
+            grouped = jax.tree.map(
+                lambda x: x.reshape((n_cross, k - 1) + x.shape[1:]), params["layers"]
+            )
+
+            def self_body(hh, lp):
+                a, kv = T.self_attn_block(cfg, lp, hh, positions, mesh)
+                hh = hh + a
+                hh = hh + T.mlp_block(cfg, lp, hh, mesh)
+                return hh, kv if collect_cache else None
+
+            def group_body(hh, xs):
+                glp, clp = xs
+                hh, kvs = jax.lax.scan(_remat(self_body, cfg.remat), hh, glp)
+                kv_k, kv_v = T.vision_kv(cfg, clp, vis)
+                a = T.cross_attn_block(cfg, clp, hh, kv_k, kv_v, mesh)
+                hh = hh + a * jnp.tanh(clp["attn_gate"]).astype(dt)
+                hh = hh + T.mlp_block(cfg, clp, hh, mesh) * jnp.tanh(clp["mlp_gate"]).astype(dt)
+                hh = constrain(hh, mesh, ("pod", "data"), None, "model")
+                return hh, (kvs, (kv_k, kv_v)) if collect_cache else None
+
+            h, ys = jax.lax.scan(group_body, h, (grouped, params["cross_layers"]))
+            if collect_cache:
+                (sk, sv), (xk, xv) = ys[0], ys[1]
+                caches["k"] = sk.reshape((-1,) + sk.shape[2:])
+                caches["v"] = sv.reshape((-1,) + sv.shape[2:])
+                caches["xk"], caches["xv"] = xk, xv
+
+        elif cfg.family == "ssm":
+            ck = _scan_chunk(Sq)
+
+            def body(hh, lp):
+                return S.mamba1_layer(cfg, lp, hh, mesh, chunk=ck), None
+
+            h, _ = jax.lax.scan(_remat(body, cfg.remat), h, params["layers"])
+
+        elif cfg.family == "hybrid":
+            k = cfg.hybrid.attn_every
+            G = cfg.n_layers // k
+            h0 = h
+            ck = _scan_chunk(Sq)
+            grouped, tail = _split_groups(params["layers"], G, k)
+
+            def inner(hh, lp):
+                return S.mamba2_layer(cfg, lp, hh, mesh, chunk=ck), None
+
+            def group_body(hh, glp):
+                hh, _ = jax.lax.scan(_remat(inner, cfg.remat), hh, glp)
+                hh, kv = _shared_block(cfg, params["shared"], hh, h0, positions, mesh)
+                hh = constrain(hh, mesh, ("pod", "data"), None, "model")
+                return hh, kv if collect_cache else None
+
+            h, ys = jax.lax.scan(group_body, h, grouped)
+            if tail is not None:  # trailing layers past the last shared block
+                h, _ = jax.lax.scan(_remat(inner, cfg.remat), h, tail)
+            if collect_cache:
+                caches["k"], caches["v"] = ys
+        else:
+            raise ValueError(cfg.family)
+
+        if not head:
+            return h, aux, caches
+        logits = T.lm_logits(cfg, params, h, mesh)
+        return logits, aux, caches
+
+    # --------------------------------------------------------------- loss --
+    def loss(self, params, batch, *, mesh=None):
+        h, aux, _ = self.forward(
+            params, batch["tokens"], vision=batch.get("vision"), mesh=mesh, head=False
+        )
+        # few, large chunks: each chunk step pays a head-gradient reduction,
+        # so chunk count (not size) drives the collective bill (§Perf)
+        chunk = max(256, h.shape[1] // 4)
+        loss = T.chunked_xent(self.cfg, params, h, batch["labels"], mesh=mesh, chunk=chunk)
+        total = loss + 0.01 * aux["moe_aux"] + 1e-3 * aux["moe_z"]
+        metrics = {"loss": loss, "moe_aux": aux["moe_aux"], "moe_z": aux["moe_z"],
+                   "tokens": jnp.float32(np.prod(batch["labels"].shape))}
+        return total, metrics
+
+    # ------------------------------------------------------------ caching --
+    def cache_dims(self) -> dict:
+        cfg = self.cfg
+        if cfg.family in ("dense", "audio", "moe"):
+            return {"kind": "kv", "n_kv_layers": cfg.n_layers}
+        if cfg.family == "vlm":
+            k = cfg.vision.cross_attn_every
+            return {"kind": "kv+x", "n_kv_layers": cfg.n_layers - cfg.n_layers // k,
+                    "n_cross": cfg.n_layers // k}
+        if cfg.family == "ssm":
+            return {"kind": "ssm", "n_ssm_layers": cfg.n_layers}
+        return {"kind": "hybrid", "n_ssm_layers": cfg.n_layers,
+                "n_kv_layers": cfg.n_layers // cfg.hybrid.attn_every}
+
+    def cache_struct(self, B: int, max_len: int) -> dict:
+        """ShapeDtypeStruct tree for the decode cache (dry-run + init)."""
+        cfg = self.cfg
+        dt = _dtype(cfg)
+        KV, hd = cfg.n_kv_heads, cfg.hd
+        dims = self.cache_dims()
+        out: dict = {"len": jax.ShapeDtypeStruct((B,), jnp.int32)}
+        if "n_kv_layers" in dims:
+            L = dims["n_kv_layers"]
+            out["k"] = jax.ShapeDtypeStruct((L, B, max_len, KV, hd), dt)
+            out["v"] = jax.ShapeDtypeStruct((L, B, max_len, KV, hd), dt)
+        if dims["kind"] == "kv+x":
+            C, Pp = dims["n_cross"], cfg.vision.n_patches
+            out["xk"] = jax.ShapeDtypeStruct((C, B, Pp, KV, hd), dt)
+            out["xv"] = jax.ShapeDtypeStruct((C, B, Pp, KV, hd), dt)
+        if dims["kind"] in ("ssm", "hybrid"):
+            L, s, di = dims["n_ssm_layers"], cfg.ssm, cfg.d_inner
+            if cfg.family == "ssm":
+                out["conv"] = jax.ShapeDtypeStruct((L, B, s.d_conv - 1, di), dt)
+                out["state"] = jax.ShapeDtypeStruct((L, B, di, s.d_state), jnp.float32)
+            else:
+                nh = di // s.head_dim
+                out["conv"] = jax.ShapeDtypeStruct((L, B, s.d_conv - 1, di + 2 * s.d_state), dt)
+                out["state"] = jax.ShapeDtypeStruct((L, B, nh, s.d_state, s.head_dim), jnp.float32)
+        return out
+
+    def init_cache(self, B: int, max_len: int) -> dict:
+        return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), self.cache_struct(B, max_len))
+
+    def cache_specs(self, mesh, B: int, max_len: int, seq_shard: bool = False):
+        """PartitionSpec tree matching cache_struct (divisibility-repaired)."""
+        from repro.models.sharding import logical_to_spec, repair_spec
+
+        ax = mesh.axis_names
+
+        def spec(*names):
+            return logical_to_spec(tuple(names), ax, ())
+
+        dims = self.cache_dims()
+        out = {"len": spec("batch")}
+        kv_axes = (None, None, "batch", "kv_heads", None) if seq_shard else (None, "batch", None, "kv_heads", None)
+        if "n_kv_layers" in dims:
+            out["k"] = spec(*kv_axes)
+            out["v"] = spec(*kv_axes)
+        if dims["kind"] == "kv+x":
+            out["xk"] = spec(None, "batch", None, "kv_heads", None)
+            out["xv"] = spec(None, "batch", None, "kv_heads", None)
+        if dims["kind"] in ("ssm", "hybrid"):
+            out["conv"] = spec(None, "batch", None, "d_inner")
+            if self.cfg.family == "ssm":
+                out["state"] = spec(None, "batch", "d_inner", None)
+            else:
+                out["state"] = spec(None, "batch", "d_inner", None, None)
+        struct = self.cache_struct(B, max_len)
+        return jax.tree.map(
+            lambda s, st: repair_spec(s, st.shape, mesh), out, struct,
+            is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec),
+        )
+
+    # ------------------------------------------------------------ prefill --
+    def prefill(self, params, tokens, *, max_len: int, vision=None, mesh=None):
+        """Process the prompt; returns (last_logits [B,(ncb,)V], cache)."""
+        cfg = self.cfg
+        B, Sq = tokens.shape[:2]
+        h, _, caches = self.forward(
+            params, tokens, vision=vision, mesh=mesh, collect_cache=True,
+            max_len=max_len, head=False,
+        )
+        # head only at the last position: full [B, S, V] logits are never
+        # needed for prefill and don't fit at 32k x 152k vocab
+        logits = T.lm_logits(cfg, params, h[:, -1:], mesh)
+        cache = {"len": jnp.full((B,), Sq, jnp.int32)}
+        if "k" in caches:
+            pad = max_len - Sq
+            cache["k"] = jnp.pad(caches["k"], ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+            cache["v"] = jnp.pad(caches["v"], ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        if "xk" in caches:
+            cache["xk"], cache["xv"] = caches["xk"], caches["xv"]
+        if cfg.family in ("ssm", "hybrid"):
+            # rerun sequentially-cheap state collection: one extra pass that
+            # keeps final conv window + state per layer
+            cache.update(self._ssm_prefill_state(params, tokens, mesh=mesh))
+        return logits[:, -1], cache
+
+    def _ssm_prefill_state(self, params, tokens, mesh=None):
+        cfg = self.cfg
+        dt = _dtype(cfg)
+        B, Sq = tokens.shape[:2]
+        params = _precast(cfg, params)
+        h = T.embed_tokens(cfg, params, tokens, dt)
+        s, di = cfg.ssm, cfg.d_inner
+        K = s.d_conv
+
+        if cfg.family == "ssm":
+            def body(hh, lp):
+                x = rms_norm(hh, lp["norm"], cfg.norm_eps)
+                xi, zg = S._mamba1_inner(cfg, lp, x, mesh)
+                conv_buf = jnp.pad(xi, ((0, 0), (K - 1, 0), (0, 0)))[:, -(K - 1):, :]
+                xi = S.causal_conv1d(xi, lp["conv_w"], lp["conv_b"])
+                xi = jax.nn.silu(xi.astype(jnp.float32)).astype(hh.dtype)
+                dtt, Bc, Cc = S._mamba1_bcdt(cfg, lp, xi)
+                A = -jnp.exp(lp["A_log"].astype(jnp.float32))
+                y, st = S.selective_scan(xi, dtt, A, Bc, Cc, lp["D"].astype(jnp.float32),
+                                         chunk=_scan_chunk(Sq))
+                y = y * jax.nn.silu(zg.astype(jnp.float32)).astype(hh.dtype)
+                hh = hh + mm("bse,ed->bsd", y, lp["out_proj"])
+                return hh, (conv_buf, st)
+
+            _, (conv, state) = jax.lax.scan(body, h, params["layers"])
+            return {"conv": conv, "state": state}
+
+        # hybrid
+        k = cfg.hybrid.attn_every
+        G = cfg.n_layers // k
+        h0 = h
+        positions = jnp.broadcast_to(jnp.arange(Sq)[None], (B, Sq))
+        grouped, tail = _split_groups(params["layers"], G, k)
+        N = s.d_state
+
+        def inner(hh, lp):
+            x = rms_norm(hh, lp["norm"], cfg.norm_eps)
+            proj = mm("bsd,de->bse", x, lp["in_proj"])
+            xi, zg, Bc, Cc, dtt = S._mamba2_split(cfg, proj)
+            xbc_in = jnp.concatenate([xi, Bc, Cc], -1)
+            conv_buf = jnp.pad(xbc_in, ((0, 0), (K - 1, 0), (0, 0)))[:, -(K - 1):, :]
+            xbc = S.causal_conv1d(xbc_in, lp["conv_w"], lp["conv_b"])
+            xbc = jax.nn.silu(xbc.astype(jnp.float32)).astype(hh.dtype)
+            xi2, Bc2, Cc2 = xbc[..., :di], xbc[..., di:di + N], xbc[..., di + N:]
+            dtt = jax.nn.softplus(dtt.astype(jnp.float32) + lp["dt_bias"].astype(jnp.float32))
+            A = -jnp.exp(lp["A_log"].astype(jnp.float32))
+            nh = di // s.head_dim
+            y, st = S.ssd_scan(xi2.reshape(B, Sq, nh, s.head_dim), dtt, A,
+                               Bc2.astype(jnp.float32), Cc2.astype(jnp.float32),
+                               chunk=_scan_chunk(Sq))
+            y = y.reshape(B, Sq, di) + xi2 * lp["D"].astype(jnp.float32).repeat(s.head_dim)[None, None]
+            y = rms_norm(y * jax.nn.silu(zg.astype(jnp.float32)).astype(hh.dtype),
+                         lp["norm_g"], cfg.norm_eps)
+            hh = hh + mm("bse,ed->bsd", y.astype(hh.dtype), lp["out_proj"])
+            return hh, (conv_buf, st)  # st: [B, nh, N, P] — matches cache layout
+
+        def group_body(hh, glp):
+            hh, cs = jax.lax.scan(inner, hh, glp)
+            hh, _ = _shared_block(cfg, params["shared"], hh, h0, positions, mesh)
+            return hh, cs
+
+        h, (conv, state) = jax.lax.scan(group_body, h, grouped)
+        conv = conv.reshape((-1,) + conv.shape[2:])
+        state = state.reshape((-1,) + state.shape[2:])
+        if tail is not None:
+            _, (tconv, tstate) = jax.lax.scan(inner, h, tail)
+            conv = jnp.concatenate([conv, tconv], 0)
+            state = jnp.concatenate([state, tstate], 0)
+        return {"conv": conv, "state": state}
+
+    # -------------------------------------------------------------- decode --
+    def decode_step(self, params, tokens, cache, *, mesh=None, seq_shard=False):
+        """tokens [B, 1(,ncb)]; returns (logits [B,(ncb,)V], new_cache)."""
+        cfg = self.cfg
+        dt = _dtype(cfg)
+        B = tokens.shape[0]
+        lens = cache["len"]
+        params = _precast(cfg, params)
+        h = T.embed_tokens(cfg, params, tokens, dt)
+        h = constrain(h, mesh, ("pod", "data"), None, "model")
+        kv_axes = (None, None, ("pod", "data"), "kv_heads", None) if seq_shard \
+            else (None, ("pod", "data"), None, "kv_heads", None)
+        new_cache = dict(cache)
+
+        if cfg.family in ("dense", "audio", "moe"):
+            def body(hh, xs):
+                lp, kc, vc = xs
+                a, kc, vc = T.self_attn_decode(cfg, lp, hh, kc, vc, lens, mesh)
+                hh = hh + a
+                if cfg.family == "moe":
+                    m, _, _ = T.moe_block(cfg, lp, hh, mesh)
+                else:
+                    m = T.mlp_block(cfg, lp, hh, mesh)
+                return hh + m, (kc, vc)
+
+            h, (kc, vc) = jax.lax.scan(body, h, (params["layers"], cache["k"], cache["v"]))
+            new_cache["k"], new_cache["v"] = kc, vc
+
+        elif cfg.family == "vlm":
+            k = cfg.vision.cross_attn_every
+            n_cross = cfg.n_layers // k
+            grouped = jax.tree.map(
+                lambda x: x.reshape((n_cross, k - 1) + x.shape[1:]), params["layers"]
+            )
+            kg = cache["k"].reshape((n_cross, k - 1) + cache["k"].shape[1:])
+            vg = cache["v"].reshape((n_cross, k - 1) + cache["v"].shape[1:])
+
+            def self_body(hh, xs):
+                lp, kc, vc = xs
+                a, kc, vc = T.self_attn_decode(cfg, lp, hh, kc, vc, lens, mesh)
+                hh = hh + a
+                hh = hh + T.mlp_block(cfg, lp, hh, mesh)
+                return hh, (kc, vc)
+
+            def group_body(hh, xs):
+                glp, gk, gv, clp, xk, xv = xs
+                hh, (gk, gv) = jax.lax.scan(self_body, hh, (glp, gk, gv))
+                a = T.cross_attn_block(cfg, clp, hh, xk, xv, mesh)
+                hh = hh + a * jnp.tanh(clp["attn_gate"]).astype(dt)
+                hh = hh + T.mlp_block(cfg, clp, hh, mesh) * jnp.tanh(clp["mlp_gate"]).astype(dt)
+                return hh, (gk, gv)
+
+            h, (kg, vg) = jax.lax.scan(
+                group_body, h, (grouped, kg, vg, params["cross_layers"], cache["xk"], cache["xv"])
+            )
+            new_cache["k"] = kg.reshape((-1,) + kg.shape[2:])
+            new_cache["v"] = vg.reshape((-1,) + vg.shape[2:])
+
+        elif cfg.family == "ssm":
+            def body(hh, xs):
+                lp, cb, st = xs
+                hh, cb, st = S.mamba1_decode(cfg, lp, hh, cb, st, mesh)
+                return hh, (cb, st)
+
+            h, (cb, st) = jax.lax.scan(body, h, (params["layers"], cache["conv"], cache["state"]))
+            new_cache["conv"], new_cache["state"] = cb, st
+
+        elif cfg.family == "hybrid":
+            k = cfg.hybrid.attn_every
+            G = cfg.n_layers // k
+            h0 = h
+            grouped, tail = _split_groups(params["layers"], G, k)
+            n_main = G * k
+            cb_main = cache["conv"][:n_main].reshape((G, k) + cache["conv"].shape[1:])
+            st_main = cache["state"][:n_main].reshape((G, k) + cache["state"].shape[1:])
+
+            def inner(hh, xs):
+                lp, cb, st = xs
+                hh, cb, st = S.mamba2_decode(cfg, lp, hh, cb, st, mesh)
+                return hh, (cb, st)
+
+            def group_body(hh, xs):
+                glp, gcb, gst, kc, vc = xs
+                hh, (gcb, gst) = jax.lax.scan(inner, hh, (glp, gcb, gst))
+                hh, kc, vc = _shared_block_decode(
+                    cfg, params["shared"], hh, h0, kc, vc, lens, mesh, seq_shard
+                )
+                return hh, (gcb, gst, kc, vc)
+
+            h, (cbg, stg, kc, vc) = jax.lax.scan(group_body, h, (grouped, cb_main, st_main, cache["k"], cache["v"]))
+            cbg = cbg.reshape((-1,) + cbg.shape[2:])
+            stg = stg.reshape((-1,) + stg.shape[2:])
+            if tail is not None:
+                h, (tcb, tst) = jax.lax.scan(
+                    inner, h, (tail, cache["conv"][n_main:], cache["state"][n_main:])
+                )
+                cbg = jnp.concatenate([cbg, tcb], 0)
+                stg = jnp.concatenate([stg, tst], 0)
+            new_cache["conv"] = cbg
+            new_cache["state"] = stg
+            new_cache["k"], new_cache["v"] = kc, vc
+        else:
+            raise ValueError(cfg.family)
+
+        logits = T.lm_logits(cfg, params, h, mesh)
+        new_cache["len"] = lens + 1
+        return logits[:, -1], new_cache
+
+
+def _scan_chunk(S: int) -> int:
+    for c in (64, 32, 16, 8, 4, 2, 1):
+        if S % c == 0:
+            return c
+    return 1
+
+
+def _split_groups(layers, G: int, k: int):
+    """Split a [L, ...] stacked-layer tree into ([G, k, ...], tail [L-G*k, ...]).
+
+    Handles layer counts not divisible by the group period (e.g. zamba2's
+    38 layers with a shared block every 6)."""
+    L = jax.tree.leaves(layers)[0].shape[0]
+    rem = L - G * k
+    grouped = jax.tree.map(lambda x: x[: G * k].reshape((G, k) + x.shape[1:]), layers)
+    tail = None if rem == 0 else jax.tree.map(lambda x: x[G * k :], layers)
+    return grouped, tail
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)

@@ -1,0 +1,294 @@
+"""Mixture-of-Experts layer: capacity-based token dispatch, GSPMD-friendly.
+
+Scale constraints drive the design (kimi-k2: 384 experts, 1M tokens/step,
+top-8 => 8.4M assignment slots):
+
+  * NO [tokens, experts, capacity] one-hot dispatch tensor (the GShard einsum
+    formulation) — at 384 experts that is ~10^13 elements.  Instead tokens are
+    scattered into a [E, C, d] buffer at (expert_id, position) and gathered
+    back; overflow drops via scatter mode='drop'.
+  * position-in-expert comes from a *hierarchical distributed cumsum*: the
+    assignment axis is reshaped to [blocks, A/blocks] with blocks matching the
+    (pod, data) sharding, so the inner cumsum is shard-local and only the tiny
+    [blocks, E] block-sum cumsum crosses shards.  No all-gather of the
+    one-hot; no distributed sort.
+  * expert weights are sharded over "model" (expert parallelism); the buffer
+    capacity dim over ("pod","data") — GSPMD inserts the all-to-all that
+    physically moves tokens to their expert's shard.
+
+Aux losses: switch-style load-balance loss + router z-loss, both returned.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.sharding import constrain
+
+
+class MoEOut(NamedTuple):
+    y: jax.Array
+    aux_loss: jax.Array
+    z_loss: jax.Array
+    dropped_frac: jax.Array
+
+
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def moe_capacity(n_tokens: int, n_experts: int, top_k: int, capacity_factor: float, multiple: int = 128) -> int:
+    c = int(np.ceil(n_tokens * top_k / n_experts * capacity_factor))
+    return max(_round_up(c, multiple), multiple)
+
+
+def distributed_cumsum(x: jax.Array, blocks: int) -> jax.Array:
+    """Exclusive cumsum over axis 0 of [A, E], hierarchical in ``blocks``
+    shard-aligned chunks (axis 0 is sharded over (pod, data))."""
+    A, E = x.shape
+    assert A % blocks == 0, (A, blocks)
+    xb = x.reshape(blocks, A // blocks, E)
+    inner = jnp.cumsum(xb, axis=1)  # inclusive, shard-local
+    block_tot = inner[:, -1, :]  # [blocks, E]
+    block_off = jnp.cumsum(block_tot, axis=0) - block_tot  # exclusive over blocks
+    out = inner - xb + block_off[:, None, :]  # exclusive overall
+    return out.reshape(A, E)
+
+
+def moe_ffn(
+    x: jax.Array,  # [T, d] tokens (flattened batch*seq)
+    router_w: jax.Array,  # [d, E]
+    w_gate: jax.Array,  # [E, d, f]
+    w_up: jax.Array,  # [E, d, f]
+    w_down: jax.Array,  # [E, f, d]
+    *,
+    top_k: int,
+    capacity_factor: float = 1.25,
+    mlp_kind: str = "swiglu",
+    cumsum_blocks: int = 32,
+    mesh=None,
+) -> MoEOut:
+    T, d = x.shape
+    E = router_w.shape[1]
+    C = moe_capacity(T, E, top_k, capacity_factor)
+
+    # ---- routing (fp32) ----------------------------------------------------
+    logits = jnp.einsum("td,de->te", x.astype(jnp.float32), router_w.astype(jnp.float32))
+    logits = constrain(logits, mesh, ("pod", "data"), "model")
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, eids = jax.lax.top_k(probs, top_k)  # [T, k]
+    gate_vals = gate_vals / jnp.maximum(jnp.sum(gate_vals, -1, keepdims=True), 1e-9)
+
+    # aux losses
+    me = jnp.mean(probs, axis=0)  # [E] mean router prob
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(eids, E, dtype=jnp.float32), axis=1), axis=0
+    )  # [E] fraction of tokens routed (top-k hits)
+    aux = E * jnp.sum(me * ce) / top_k
+    z = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+
+    # ---- positions within expert (hierarchical cumsum, no sort) -----------
+    A = T * top_k
+    flat_e = eids.reshape(A)
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.float32)  # [A, E] sharded (pod,data) x model
+    onehot = constrain(onehot, mesh, ("pod", "data"), "model")
+    blocks = int(np.gcd(cumsum_blocks, A))
+    pos = distributed_cumsum(onehot, blocks)  # exclusive counts
+    pos = jnp.sum(pos * onehot, axis=-1).astype(jnp.int32)  # [A] position in expert
+    dropped = (pos >= C).astype(jnp.float32)
+
+    # ---- dispatch: scatter tokens into [E, C, d] ---------------------------
+    tok_idx = jnp.repeat(jnp.arange(T), top_k)
+    x_rep = jnp.take(x, tok_idx, axis=0)  # [A, d]
+    buf = jnp.zeros((E, C, d), x.dtype)
+    buf = buf.at[flat_e, pos].set(x_rep, mode="drop")  # overflow tokens dropped
+    buf = constrain(buf, mesh, "model", ("pod", "data"), None)
+
+    # ---- expert FFN ---------------------------------------------------------
+    g = jnp.einsum("ecd,edf->ecf", buf, w_gate.astype(buf.dtype))
+    if mlp_kind == "swiglu":
+        u = jnp.einsum("ecd,edf->ecf", buf, w_up.astype(buf.dtype))
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(buf.dtype) * u
+    else:
+        h = jax.nn.gelu(g)
+    h = constrain(h, mesh, "model", ("pod", "data"), None)
+    out_buf = jnp.einsum("ecf,efd->ecd", h, w_down.astype(buf.dtype))
+    out_buf = constrain(out_buf, mesh, "model", ("pod", "data"), None)
+
+    # ---- combine: gather back and weight ------------------------------------
+    flat_pos_ok = jnp.where(dropped > 0, C, pos)  # OOB -> fill 0
+    y_rep = out_buf.at[flat_e, flat_pos_ok].get(mode="fill", fill_value=0)  # [A, d]
+    y = jnp.sum(
+        (y_rep * gate_vals.reshape(A, 1).astype(y_rep.dtype)).reshape(T, top_k, d), axis=1
+    )
+    y = constrain(y, mesh, ("pod", "data"), "model")
+    return MoEOut(y=y, aux_loss=aux, z_loss=z, dropped_frac=jnp.mean(dropped))
+
+
+def moe_ffn_shardmap(
+    x: jax.Array,  # [T, d] GLOBAL tokens (sharded over data axes outside)
+    router_w: jax.Array,  # [d, E]
+    w_gate: jax.Array,  # [E, d, f]
+    w_up: jax.Array,
+    w_down: jax.Array,  # [E, f, d]
+    *,
+    top_k: int,
+    capacity_factor: float = 1.25,
+    mlp_kind: str = "swiglu",
+    mesh=None,
+    fsdp_axes: tuple = (),
+    compute_dtype=jnp.bfloat16,
+) -> MoEOut:
+    """Expert-parallel MoE via shard_map — the at-scale path.
+
+    GSPMD cannot partition the dispatch scatter (it replicates the [E,C,d]
+    buffer and all-reduces it: ~170 TB/step for kimi-k2). Under shard_map
+    every collective is explicit and minimal:
+
+      * tokens stay on their (pod, data) shard for the whole block — routing,
+        dispatch and combine are LOCAL (GShard per-shard capacity semantics);
+      * x's model-sharded d dim is all-gathered once ([T_loc, d], bf16);
+      * expert weights (sharded "experts"->model, d->fsdp axes) are
+        ZeRO-3-gathered over the fsdp axes JUST-IN-TIME, cast to bf16 BEFORE
+        the gather (halves link bytes vs f32);
+      * each model shard computes only its E/ep experts for all local
+        tokens; the combine is one psum over "model".
+
+    Autodiff through shard_map transposes the gathers into reduce-scatters,
+    giving the ZeRO-3 gradient schedule for free.
+    """
+    assert mesh is not None and "model" in mesh.axis_names
+    data_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    ep = mesh.shape["model"]
+    T, d = x.shape
+    E = router_w.shape[1]
+    assert E % ep == 0, (E, ep)
+    n_data = 1
+    for a in data_axes:
+        n_data *= mesh.shape[a]
+    T_loc = T // n_data
+    C = moe_capacity(T_loc, E, top_k, capacity_factor, multiple=4)
+    fsdp = tuple(a for a in fsdp_axes if a in mesh.axis_names)
+
+    def body(x_loc, rw, wg, wu, wd):
+        # x_loc [T_loc, d_loc] -> [T_loc, d]
+        if mesh.shape["model"] > 1:
+            x_full = jax.lax.all_gather(x_loc, "model", axis=1, tiled=True)
+        else:
+            x_full = x_loc
+        logits = jnp.einsum("td,de->te", x_full.astype(jnp.float32), rw.astype(jnp.float32))
+        probs = jax.nn.softmax(logits, axis=-1)
+        gate_vals, eids = jax.lax.top_k(probs, top_k)
+        gate_vals = gate_vals / jnp.maximum(jnp.sum(gate_vals, -1, keepdims=True), 1e-9)
+
+        me = jnp.mean(probs, axis=0)
+        ce = jnp.mean(jnp.sum(jax.nn.one_hot(eids, E, dtype=jnp.float32), axis=1), axis=0)
+        aux = E * jnp.sum(me * ce) / top_k
+        z = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+
+        # local positions within each expert (exclusive cumsum of one-hot)
+        A = T_loc * top_k
+        flat_e = eids.reshape(A)
+        onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.float32)
+        pos = (jnp.cumsum(onehot, axis=0) - onehot)
+        pos = jnp.sum(pos * onehot, axis=-1).astype(jnp.int32)
+        dropped = (pos >= C).astype(jnp.float32)
+
+        # my experts only
+        j = jax.lax.axis_index("model")
+        e_loc = E // ep
+        local_e = flat_e - j * e_loc  # in [0, e_loc) if mine
+        mine = (local_e >= 0) & (local_e < e_loc)
+        scatter_e = jnp.where(mine, local_e, e_loc)  # OOB -> dropped
+        scatter_p = jnp.where(dropped > 0, C, pos)
+
+        # index-based dispatch: scatter token INDICES (int32, tiny), gather
+        # once — never materializes the [T_loc*top_k, d] replicated tokens
+        tok_idx = jnp.repeat(jnp.arange(T_loc), top_k)
+        inv = jnp.full((e_loc, C), T_loc, jnp.int32)  # sentinel = OOB row
+        inv = inv.at[scatter_e, scatter_p].set(tok_idx, mode="drop")
+        xd = x_full.astype(compute_dtype)
+        buf = jnp.take(xd, inv.reshape(-1), axis=0, mode="fill", fill_value=0)
+        buf = buf.reshape(e_loc, C, d)
+
+        # ZeRO-3 just-in-time weight gather (bf16 over the wire)
+        def gather_w(w, axis):
+            w = w.astype(compute_dtype)
+            for a in fsdp:
+                w = jax.lax.all_gather(w, a, axis=axis, tiled=True)
+            return w
+
+        # bf16 operands + f32 accumulation: keeps the ZeRO-3 weight gathers
+        # and the dispatch buffer in bf16 through XLA (see layers.mm)
+        g = jnp.einsum("ecd,edf->ecf", buf, gather_w(wg, 1),
+                       preferred_element_type=jnp.float32).astype(compute_dtype)
+        if mlp_kind == "swiglu":
+            u = jnp.einsum("ecd,edf->ecf", buf, gather_w(wu, 1),
+                           preferred_element_type=jnp.float32).astype(compute_dtype)
+            h = jax.nn.silu(g.astype(jnp.float32)).astype(compute_dtype) * u
+        else:
+            h = jax.nn.gelu(g)
+        out_buf = jnp.einsum("ecf,efd->ecd", h, gather_w(wd, 2),
+                             preferred_element_type=jnp.float32).astype(compute_dtype)
+
+        # combine one top-k slot at a time ([T_loc, d] each) — never the
+        # full [T_loc*top_k, d]
+        gv = gate_vals.reshape(T_loc, top_k)
+        se = scatter_e.reshape(T_loc, top_k)
+        sp = scatter_p.reshape(T_loc, top_k)
+        y = jnp.zeros((T_loc, d), compute_dtype)
+        for s in range(top_k):
+            ys = out_buf.at[se[:, s], sp[:, s]].get(mode="fill", fill_value=0)
+            y = y + ys * gv[:, s : s + 1].astype(compute_dtype)
+        y = jax.lax.psum(y, "model")  # combine expert contributions
+        # aux losses: identical across model; average over data shards
+        aux = jax.lax.pmean(aux, data_axes) if data_axes else aux
+        z = jax.lax.pmean(z, data_axes) if data_axes else z
+        dfrac = jax.lax.pmean(jnp.mean(dropped), data_axes) if data_axes else jnp.mean(dropped)
+        return y, aux, z, dfrac
+
+    P = jax.sharding.PartitionSpec
+    d_spec = fsdp[0] if len(fsdp) == 1 else (tuple(fsdp) if fsdp else None)
+    out = jax.shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(
+            P(data_axes, "model"),      # x: tokens over data, d over model
+            P(None, None),              # router replicated
+            P("model", d_spec, None),   # w_gate [E, d, f]
+            P("model", d_spec, None),   # w_up
+            P("model", None, d_spec),   # w_down [E, f, d]
+        ),
+        out_specs=(P(data_axes, None), P(), P(), P()),
+        check_vma=False,
+    )(x, router_w, w_gate, w_up, w_down)
+    y, aux, z, dfrac = out
+    return MoEOut(y=y.astype(x.dtype), aux_loss=aux, z_loss=z, dropped_frac=dfrac)
+
+
+def moe_ffn_dense_ref(x, router_w, w_gate, w_up, w_down, *, top_k, mlp_kind="swiglu"):
+    """No-capacity oracle: every token sees its full top-k experts (tests)."""
+    T, d = x.shape
+    E = router_w.shape[1]
+    logits = jnp.einsum("td,de->te", x.astype(jnp.float32), router_w.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, -1)
+    gate_vals, eids = jax.lax.top_k(probs, top_k)
+    gate_vals = gate_vals / jnp.maximum(jnp.sum(gate_vals, -1, keepdims=True), 1e-9)
+
+    def expert(e, xt):
+        g = xt @ w_gate[e].astype(xt.dtype)
+        if mlp_kind == "swiglu":
+            h = jax.nn.silu(g.astype(jnp.float32)).astype(xt.dtype) * (xt @ w_up[e].astype(xt.dtype))
+        else:
+            h = jax.nn.gelu(g)
+        return h @ w_down[e].astype(xt.dtype)
+
+    all_out = jnp.stack([expert(e, x) for e in range(E)])  # [E, T, d]
+    y = jnp.zeros_like(x)
+    for s in range(top_k):
+        sel = all_out[eids[:, s], jnp.arange(T)]  # [T, d]
+        y = y + sel * gate_vals[:, s : s + 1].astype(x.dtype)
+    return y

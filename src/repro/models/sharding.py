@@ -1,0 +1,261 @@
+"""Logical-axis -> mesh-axis sharding rules (GSPMD/pjit).
+
+The production mesh axes are ("data", "model") single-pod and
+("pod", "data", "model") multi-pod (launch/mesh.py).  Sharding policy:
+
+  * batch            -> ("pod", "data")   pure DP across pods, DP within
+  * TP dims          -> "model"           heads / ff / experts / vocab / d_inner
+  * FSDP (ZeRO-3)    -> params' "embed" dim over fsdp_axes (cfg.fsdp);
+                        large-MoE configs extend fsdp_axes to ("data","pod")
+                        so 1T-param optimizer state fits HBM
+  * activations      -> tokens over ("pod","data"), d_model over "model"
+                        (sequence-parallel-style residual sharding keeps the
+                        remat-saved activations HBM-light)
+
+All helpers silently drop mesh axes that don't exist on the current mesh, so
+the same model code runs on the single-pod, multi-pod and 1-device CPU mesh.
+"""
+from __future__ import annotations
+
+import contextvars
+from contextlib import contextmanager
+from typing import Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import defs as D
+
+BATCH_AXES = ("pod", "data")
+TP_AXIS = "model"
+
+# --------------------------------------------------------------------------- #
+# parallelism policy (§Perf hillclimb): "tp" (default) uses the mesh's model
+# axis for tensor parallelism; "dp" folds it into data parallelism + ZeRO-3 —
+# for ≤13B dense models at 1M-token batches the per-layer TP activation
+# gathers (~1 TB/dev/step) dwarf the ZeRO-3 parameter traffic (~50 GB), so
+# "dp" is ~20x less collective-bound. Selected per (arch, shape) by
+# launch.policy.parallelism_for.
+# --------------------------------------------------------------------------- #
+
+_POLICY: contextvars.ContextVar = contextvars.ContextVar("parallelism", default="tp")
+
+
+@contextmanager
+def parallelism(mode: str):
+    assert mode in ("tp", "dp"), mode
+    tok = _POLICY.set(mode)
+    try:
+        yield
+    finally:
+        _POLICY.reset(tok)
+
+
+def current_parallelism() -> str:
+    return _POLICY.get()
+
+
+def _dp_mode() -> bool:
+    return _POLICY.get() == "dp"
+
+
+def fsdp_axes_for(cfg) -> tuple:
+    """ZeRO-3 axes policy: large MoE shards params/optimizer over data AND
+    pod (1T-param optimizer state cannot fit otherwise)."""
+    if not getattr(cfg, "fsdp", False):
+        return ()
+    if getattr(cfg, "moe", None) is not None and cfg.moe.n_experts >= 64:
+        return ("data", "pod")
+    return ("data",)
+
+# logical axis -> mesh axes (None = replicated). "embed" is resolved per-config.
+_TP_AXES = {"vocab", "heads", "kv_heads", "ff", "experts", "d_inner"}
+
+
+def _filter(mesh_axes: Sequence[str], want) -> Optional[tuple]:
+    """Keep only axes present on the mesh; None if nothing survives."""
+    if want is None:
+        return None
+    if isinstance(want, str):
+        want = (want,)
+    got = tuple(a for a in want if a in mesh_axes)
+    return got or None
+
+
+def logical_to_spec(axes: tuple, mesh_axes: Sequence[str], fsdp_axes=()) -> P:
+    """Map a tuple of logical axis names to a PartitionSpec (policy-aware).
+
+    TP dims claim mesh axes FIRST (priority), then batch, then FSDP "embed" —
+    so e.g. lm_head ("embed", "vocab") keeps vocab on "model" even when
+    dp-mode extends the fsdp axes (vocab sharding keeps the chunked-xent
+    head gradient sharded instead of all-gathered per chunk)."""
+    out: list = [None] * len(axes)
+    used: set = set()
+    dp = _dp_mode()
+
+    def take(want):
+        got = _filter(mesh_axes, want)
+        if got is None:
+            return None
+        got = tuple(a for a in got if a not in used)
+        if not got:
+            return None
+        used.update(got)
+        return got if len(got) > 1 else got[0]
+
+    # pass 1: TP dims ("vocab" stays model-sharded even in dp-mode)
+    for i, name in enumerate(axes):
+        if name in _TP_AXES:
+            if name == "vocab" or not dp:
+                out[i] = take(TP_AXIS)
+    # pass 2: batch
+    for i, name in enumerate(axes):
+        if name == "batch":
+            ba = BATCH_AXES + ((TP_AXIS,) if dp else ())
+            out[i] = take(ba)
+    # pass 3: fsdp embed
+    for i, name in enumerate(axes):
+        if name == "embed":
+            fa = tuple(fsdp_axes) + ((TP_AXIS,) if dp and fsdp_axes else ())
+            out[i] = take(fa)
+    return P(*out)
+
+
+# logical dims whose mesh axis must NOT be relocated when it doesn't divide:
+# moving "model" onto head_dim makes every attention dot reshard (XLA
+# "involuntary full rematerialization") — replicating KV/Q projections over
+# model is far cheaper (the GQA-TP standard when kv_heads < TP degree).
+_NO_RELOCATE = {"heads", "kv_heads"}
+
+
+def repair_spec(spec: P, shape: tuple, mesh: Mesh, axes_names: tuple = (), relocate: bool = True) -> P:
+    """Make ``spec`` valid for explicit in_shardings on ``shape``:
+
+    1. drop any mesh-axis assignment whose shard count does not divide the
+       dimension (jit argument shardings must divide evenly);
+    2. relocate each dropped mesh axis onto the largest *free* dim that it
+       does divide (granite's vocab 49155 -> d_model; decode caches ->
+       sequence dim), EXCEPT axes dropped from head dims (_NO_RELOCATE),
+       which replicate instead. The §Perf log discusses the consequences.
+    """
+    sizes = dict(mesh.shape)
+
+    def nshards(entry) -> int:
+        if entry is None:
+            return 1
+        names = entry if isinstance(entry, tuple) else (entry,)
+        n = 1
+        for a in names:
+            n *= sizes.get(a, 1)
+        return n
+
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    names = tuple(axes_names) + (None,) * (len(shape) - len(axes_names))
+    dropped = []
+    for i, (e, dim) in enumerate(zip(entries, shape)):
+        if e is not None and dim % nshards(e) != 0:
+            if relocate and names[i] not in _NO_RELOCATE:
+                dropped.append(e)
+            entries[i] = None
+
+    def astuple(e):
+        return () if e is None else (e if isinstance(e, tuple) else (e,))
+
+    for e in dropped:
+        # prefer a free dim; else EXTEND an existing entry if the combined
+        # shard count still divides (granite: d=4096 takes (data, model))
+        frees = [
+            (dim, i) for i, (ee, dim) in enumerate(zip(entries, shape))
+            if ee is None and dim % nshards(e) == 0 and dim > 1
+        ]
+        if frees:
+            _, i = max(frees)
+            entries[i] = e
+            continue
+        exts = [
+            (dim, i) for i, (ee, dim) in enumerate(zip(entries, shape))
+            if ee is not None and not set(astuple(ee)) & set(astuple(e))
+            and dim % (nshards(ee) * nshards(e)) == 0
+        ]
+        if exts:
+            _, i = max(exts)
+            entries[i] = astuple(entries[i]) + astuple(e)
+    return P(*entries)
+
+
+def param_specs(defs, mesh: Mesh, fsdp_axes=()):
+    """PartitionSpec tree for a ParamDef tree (divisibility-repaired)."""
+    ax = mesh.axis_names
+    return jax.tree.map(
+        lambda d: repair_spec(
+            logical_to_spec(d.axes, ax, fsdp_axes), d.shape, mesh, d.axes
+        ),
+        defs,
+        is_leaf=D.is_def,
+    )
+
+
+def param_shardings(defs, mesh: Mesh, fsdp_axes=()):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), param_specs(defs, mesh, fsdp_axes)
+    )
+
+
+def batch_spec(mesh: Mesh, extra_dims: int = 1) -> P:
+    """[B, ...] tokens: batch over ("pod","data"[,"model" in dp]), rest replicated."""
+    ba = BATCH_AXES + ((TP_AXIS,) if _dp_mode() else ())
+    b = _filter(mesh.axis_names, ba)
+    return P(b, *([None] * extra_dims))
+
+
+def constrain(x, mesh: Optional[Mesh], *axes):
+    """with_sharding_constraint with mesh-axis names; no-op off-mesh.
+
+    Drops (without relocation) any axis whose shard count does not divide
+    the dimension — sharding 40 heads 16-ways would force GSPMD padding
+    inside every attention einsum.
+    """
+    if mesh is None or mesh.empty:
+        return x
+    if _dp_mode():
+        # model axis joins the batch axes; feature dims unshard
+        def tr(a):
+            if a == TP_AXIS or a == (TP_AXIS,):
+                return None
+            if isinstance(a, tuple) and set(a) <= set(BATCH_AXES):
+                return tuple(a) + (TP_AXIS,)
+            return a
+
+        axes = tuple(tr(a) for a in axes)
+    resolved = tuple(_filter(mesh.axis_names, a) for a in axes)
+    resolved = tuple(
+        (r if r is None or len(r) > 1 else r[0]) for r in resolved
+    )
+    spec = repair_spec(P(*resolved), x.shape, mesh, relocate=False)
+    try:
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+    except ValueError:
+        return x
+
+
+def constrain_logical(x, mesh: Optional[Mesh], *names):
+    """Policy-aware activation constraint using LOGICAL axis names
+    ("batch"/"vocab"/"heads"/...), repaired against x.shape. Relocation is
+    ON: a non-dividing vocab axis moves to batch/seq dims (token sharding)
+    rather than leaving huge logits under-sharded."""
+    if mesh is None or mesh.empty:
+        return x
+    spec = logical_to_spec(tuple(names), mesh.axis_names, ())
+    spec = repair_spec(spec, x.shape, mesh, tuple(names), relocate=True)
+    try:
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+    except ValueError:
+        return x
+
+
+def activation_spec(mesh: Mesh) -> P:
+    """[B, S, d] hidden state: (pod,data) on batch, model on d."""
+    ax = mesh.axis_names
+    b = _filter(ax, BATCH_AXES)
+    m = _filter(ax, TP_AXIS)
+    return P(b, None, m if m is None or len(m) > 1 else m[0])

@@ -1,0 +1,201 @@
+"""SSM-family model pieces: Mamba1 (falcon-mamba) and Mamba2+shared-attention
+hybrid (zamba2). Param defs + per-layer apply functions (train seq + decode
+step). Stacking/scanning over layers happens in model.py."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import defs as D
+from repro.models.layers import mlp_act, mm, rms_norm
+from repro.models.mamba import (
+    causal_conv1d,
+    conv_step,
+    selective_scan,
+    selective_scan_step,
+    ssd_scan,
+    ssd_step,
+)
+from repro.models.sharding import constrain
+
+P_ = D.ParamDef
+
+
+# --------------------------------------------------------------------------- #
+# Mamba1 (falcon-mamba)
+# --------------------------------------------------------------------------- #
+
+
+def mamba1_defs(cfg: ModelConfig) -> dict:
+    L, d, di = cfg.n_layers, cfg.d_model, cfg.d_inner
+    s, dtr = cfg.ssm, cfg.dt_rank
+    return {
+        "norm": P_((L, d), ("layers", None), "ones"),
+        "in_proj": P_((L, d, 2 * di), ("layers", "embed", "d_inner")),
+        "conv_w": P_((L, s.d_conv, di), ("layers", None, "d_inner")),
+        "conv_b": P_((L, di), ("layers", "d_inner"), "zeros"),
+        "x_proj": P_((L, di, dtr + 2 * s.d_state), ("layers", "d_inner", None)),
+        "dt_proj": P_((L, dtr, di), ("layers", None, "d_inner")),
+        "dt_bias": P_((L, di), ("layers", "d_inner"), "dt_bias"),
+        "A_log": P_((L, di, s.d_state), ("layers", "d_inner", None), "ssm_a"),
+        "D": P_((L, di), ("layers", "d_inner"), "ones"),
+        "out_proj": P_((L, di, d), ("layers", "d_inner", "embed")),
+    }
+
+
+def _mamba1_inner(cfg: ModelConfig, lp: dict, x: jax.Array, mesh):
+    """Shared pre-scan computation. x: [B, S, d] normed input."""
+    di, s, dtr = cfg.d_inner, cfg.ssm, cfg.dt_rank
+    xz = mm("bsd,de->bse", x, lp["in_proj"])
+    xz = constrain(xz, mesh, ("pod", "data"), None, "model")
+    xi, zg = jnp.split(xz, 2, axis=-1)
+    return xi, zg
+
+
+def _mamba1_bcdt(cfg, lp, xi):
+    s, dtr = cfg.ssm, cfg.dt_rank
+    bcdt = mm("bse,ek->bsk", xi, lp["x_proj"])
+    dt_low = bcdt[..., :dtr]
+    Bc = bcdt[..., dtr : dtr + s.d_state].astype(jnp.float32)
+    Cc = bcdt[..., dtr + s.d_state :].astype(jnp.float32)
+    dt = mm("bsk,ke->bse", dt_low, lp["dt_proj"])
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + lp["dt_bias"].astype(jnp.float32))
+    return dt, Bc, Cc
+
+
+def mamba1_layer(cfg: ModelConfig, lp: dict, h: jax.Array, mesh=None, chunk: int = 64):
+    """Full-sequence Mamba1 block. h: [B, S, d]."""
+    x = rms_norm(h, lp["norm"], cfg.norm_eps)
+    xi, zg = _mamba1_inner(cfg, lp, x, mesh)
+    xi = causal_conv1d(xi, lp["conv_w"], lp["conv_b"])
+    xi = jax.nn.silu(xi.astype(jnp.float32)).astype(h.dtype)
+    dt, Bc, Cc = _mamba1_bcdt(cfg, lp, xi)
+    A = -jnp.exp(lp["A_log"].astype(jnp.float32))
+    y, _ = selective_scan(xi, dt, A, Bc, Cc, lp["D"].astype(jnp.float32), chunk=chunk)
+    y = y * jax.nn.silu(zg.astype(jnp.float32)).astype(h.dtype)
+    out = mm("bse,ed->bsd", y, lp["out_proj"])
+    return h + out
+
+
+def mamba1_decode(cfg: ModelConfig, lp: dict, h: jax.Array, conv_buf, state, mesh=None):
+    """One-token step. h: [B, 1, d]; conv_buf [B, K-1, di]; state [B, di, N]."""
+    x = rms_norm(h, lp["norm"], cfg.norm_eps)
+    xi, zg = _mamba1_inner(cfg, lp, x, mesh)
+    xi_t, conv_buf = conv_step(xi[:, 0], conv_buf, lp["conv_w"], lp["conv_b"])
+    xi_t = jax.nn.silu(xi_t.astype(jnp.float32)).astype(h.dtype)
+    dt, Bc, Cc = _mamba1_bcdt(cfg, lp, xi_t[:, None])
+    A = -jnp.exp(lp["A_log"].astype(jnp.float32))
+    y, state = selective_scan_step(
+        xi_t, dt[:, 0], A, Bc[:, 0], Cc[:, 0], lp["D"].astype(jnp.float32), state
+    )
+    y = y[:, None] * jax.nn.silu(zg.astype(jnp.float32)).astype(h.dtype)
+    out = mm("bse,ed->bsd", y, lp["out_proj"])
+    return h + out, conv_buf, state
+
+
+# --------------------------------------------------------------------------- #
+# Mamba2 layer (zamba2 hybrid)
+# --------------------------------------------------------------------------- #
+
+
+def mamba2_defs(cfg: ModelConfig, L: int) -> dict:
+    d, di, s = cfg.d_model, cfg.d_inner, cfg.ssm
+    nh = di // s.head_dim
+    N = s.d_state
+    return {
+        "norm": P_((L, d), ("layers", None), "ones"),
+        "in_proj": P_((L, d, 2 * di + 2 * N + nh), ("layers", "embed", "d_inner")),
+        "conv_w": P_((L, s.d_conv, di + 2 * N), ("layers", None, "d_inner")),
+        "conv_b": P_((L, di + 2 * N), ("layers", "d_inner"), "zeros"),
+        "dt_bias": P_((L, nh), ("layers", None), "dt_bias"),
+        "A_log": P_((L, nh), ("layers", None), "ssm_a"),
+        "D": P_((L, nh), ("layers", None), "ones"),
+        "norm_g": P_((L, di), ("layers", "d_inner"), "ones"),
+        "out_proj": P_((L, di, d), ("layers", "d_inner", "embed")),
+    }
+
+
+def _mamba2_split(cfg: ModelConfig, proj: jax.Array):
+    di, N = cfg.d_inner, cfg.ssm.d_state
+    nh = di // cfg.ssm.head_dim
+    xi = proj[..., :di]
+    zg = proj[..., di : 2 * di]
+    Bc = proj[..., 2 * di : 2 * di + N]
+    Cc = proj[..., 2 * di + N : 2 * di + 2 * N]
+    dt = proj[..., 2 * di + 2 * N :]
+    return xi, zg, Bc, Cc, dt
+
+
+def mamba2_layer(cfg: ModelConfig, lp: dict, h: jax.Array, mesh=None, chunk: int = 64):
+    B, S, _ = h.shape
+    di, s = cfg.d_inner, cfg.ssm
+    nh, N = di // s.head_dim, s.d_state
+    x = rms_norm(h, lp["norm"], cfg.norm_eps)
+    proj = mm("bsd,de->bse", x, lp["in_proj"])
+    proj = constrain(proj, mesh, ("pod", "data"), None, "model")
+    xi, zg, Bc, Cc, dt = _mamba2_split(cfg, proj)
+    xbc = causal_conv1d(jnp.concatenate([xi, Bc, Cc], -1), lp["conv_w"], lp["conv_b"])
+    xbc = jax.nn.silu(xbc.astype(jnp.float32)).astype(h.dtype)
+    xi, Bc, Cc = xbc[..., :di], xbc[..., di : di + N], xbc[..., di + N :]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + lp["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(lp["A_log"].astype(jnp.float32))
+    y, _ = ssd_scan(
+        xi.reshape(B, S, nh, s.head_dim), dt, A,
+        Bc.astype(jnp.float32), Cc.astype(jnp.float32), chunk=chunk,
+    )
+    y = y.reshape(B, S, di) + xi * lp["D"].astype(jnp.float32).repeat(s.head_dim)[None, None]
+    y = rms_norm(y * jax.nn.silu(zg.astype(jnp.float32)).astype(h.dtype), lp["norm_g"], cfg.norm_eps)
+    out = mm("bse,ed->bsd", y.astype(h.dtype), lp["out_proj"])
+    return h + out.astype(h.dtype)
+
+
+def mamba2_decode(cfg: ModelConfig, lp: dict, h: jax.Array, conv_buf, state, mesh=None):
+    """h: [B,1,d]; conv_buf [B, K-1, di+2N]; state [B, nh, N, hd_ssm] fp32."""
+    B = h.shape[0]
+    di, s = cfg.d_inner, cfg.ssm
+    nh, N = di // s.head_dim, s.d_state
+    x = rms_norm(h, lp["norm"], cfg.norm_eps)
+    proj = mm("bsd,de->bse", x, lp["in_proj"])
+    xi, zg, Bc, Cc, dt = _mamba2_split(cfg, proj)
+    xbc_t, conv_buf = conv_step(
+        jnp.concatenate([xi, Bc, Cc], -1)[:, 0], conv_buf, lp["conv_w"], lp["conv_b"]
+    )
+    xbc_t = jax.nn.silu(xbc_t.astype(jnp.float32)).astype(h.dtype)
+    xi_t, B_t, C_t = xbc_t[..., :di], xbc_t[..., di : di + N], xbc_t[..., di + N :]
+    dt_t = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + lp["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(lp["A_log"].astype(jnp.float32))
+    y, state = ssd_step(
+        xi_t.reshape(B, nh, s.head_dim), dt_t, A,
+        B_t.astype(jnp.float32), C_t.astype(jnp.float32), state,
+    )
+    y = y.reshape(B, di) + xi_t * lp["D"].astype(jnp.float32).repeat(s.head_dim)[None]
+    y = rms_norm(
+        y[:, None] * jax.nn.silu(zg.astype(jnp.float32)).astype(h.dtype),
+        lp["norm_g"], cfg.norm_eps,
+    )
+    out = mm("bse,ed->bsd", y.astype(h.dtype), lp["out_proj"])
+    return h + out.astype(h.dtype), conv_buf, state
+
+
+# --------------------------------------------------------------------------- #
+# zamba2 shared attention block (weights shared across invocations)
+# --------------------------------------------------------------------------- #
+
+
+def shared_block_defs(cfg: ModelConfig) -> dict:
+    d, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    ff = cfg.hybrid.shared_attn_mlp_ff
+    return {
+        "ln1": P_((2 * d,), (None,), "ones"),
+        "wq": P_((2 * d, H, hd), (None, "heads", None)),
+        "wk": P_((2 * d, KV, hd), (None, "kv_heads", None)),
+        "wv": P_((2 * d, KV, hd), (None, "kv_heads", None)),
+        "wo": P_((H * hd, d), ("heads", "embed")),
+        "ln2": P_((d,), (None,), "ones"),
+        "w_gate": P_((d, ff), ("embed", "ff")),
+        "w_up": P_((d, ff), ("embed", "ff")),
+        "w_down": P_((ff, d), ("ff", "embed")),
+    }

@@ -1,0 +1,293 @@
+"""Transformer spine: dense / MoE / VLM(cross-attn) / audio(multi-codebook)
+families. Parameters are declared as ParamDef trees (defs.py) with per-layer
+arrays stacked on a leading "layers" dim and applied via lax.scan (+remat),
+so a 61-layer 1T-param model lowers to a small HLO.
+
+Layer pattern handling:
+  * homogeneous stacks (dense/moe)       -> single scan over L layers
+  * periodic patterns (vlm: 4 self + 1 cross; handled in model.py for
+    hybrid) -> scan over GROUPS whose body runs an inner scan over the
+    homogeneous sub-stack plus the special layer, keeping HLO size O(1) in
+    depth.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import defs as D
+from repro.models.layers import (
+    apply_rope,
+    attention,
+    decode_attention,
+    mlp_act,
+    mm,
+    rms_norm,
+)
+from repro.models.moe import moe_ffn
+from repro.models.sharding import constrain
+
+P_ = D.ParamDef
+
+
+# --------------------------------------------------------------------------- #
+# param definitions
+# --------------------------------------------------------------------------- #
+
+
+def attn_defs(cfg: ModelConfig, L: int, d_in: Optional[int] = None) -> dict:
+    d = d_in or cfg.d_model
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    defs = {
+        "ln1": P_((L, cfg.d_model) if d_in is None else (L, d), ("layers", None), "ones"),
+        "wq": P_((L, d, H, hd), ("layers", "embed", "heads", None)),
+        "wk": P_((L, d, KV, hd), ("layers", "embed", "kv_heads", None)),
+        "wv": P_((L, d, KV, hd), ("layers", "embed", "kv_heads", None)),
+        "wo": P_((L, H * hd, cfg.d_model), ("layers", "heads", "embed")),
+    }
+    if cfg.qkv_bias:
+        defs["bq"] = P_((L, H, hd), ("layers", "heads", None), "zeros")
+        defs["bk"] = P_((L, KV, hd), ("layers", "kv_heads", None), "zeros")
+        defs["bv"] = P_((L, KV, hd), ("layers", "kv_heads", None), "zeros")
+    return defs
+
+
+def mlp_defs(cfg: ModelConfig, L: int) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    defs = {
+        "ln2": P_((L, d), ("layers", None), "ones"),
+        "w_gate": P_((L, d, f), ("layers", "embed", "ff")),
+        "w_down": P_((L, f, d), ("layers", "ff", "embed")),
+    }
+    if cfg.mlp_type == "swiglu":
+        defs["w_up"] = P_((L, d, f), ("layers", "embed", "ff"))
+    return defs
+
+
+def moe_defs(cfg: ModelConfig, L: int) -> dict:
+    d, e = cfg.d_model, cfg.moe
+    f = e.d_ff_expert
+    return {
+        "ln2": P_((L, d), ("layers", None), "ones"),
+        "router": P_((L, d, e.n_experts), ("layers", "embed", None), "normal", 0.1),
+        "w_gate": P_((L, e.n_experts, d, f), ("layers", "experts", "embed", None)),
+        "w_up": P_((L, e.n_experts, d, f), ("layers", "experts", "embed", None)),
+        "w_down": P_((L, e.n_experts, f, d), ("layers", "experts", None, "embed")),
+    }
+
+
+def transformer_defs(cfg: ModelConfig) -> dict:
+    V, d = cfg.vocab_size, cfg.d_model
+    ncb = cfg.audio.n_codebooks if cfg.audio else 1
+    defs: dict = {
+        "embed": P_((ncb, V, d), (None, "vocab", "embed"), "embed", 0.02),
+        "final_norm": P_((d,), (None,), "ones"),
+        "lm_head": P_((ncb, d, V), (None, "embed", "vocab")),
+    }
+    if cfg.family == "moe":
+        L = cfg.n_layers
+        defs["layers"] = {**attn_defs(cfg, L), **moe_defs(cfg, L)}
+    elif cfg.vision:
+        k = cfg.vision.cross_attn_every
+        n_cross = cfg.n_layers // k
+        n_self = cfg.n_layers - n_cross
+        assert n_self % n_cross == 0
+        defs["layers"] = {**attn_defs(cfg, n_self), **mlp_defs(cfg, n_self)}
+        cross = {**attn_defs(cfg, n_cross), **mlp_defs(cfg, n_cross)}
+        cross["attn_gate"] = P_((n_cross,), ("layers",), "zeros")
+        cross["mlp_gate"] = P_((n_cross,), ("layers",), "zeros")
+        defs["cross_layers"] = cross
+        defs["patch_proj"] = P_((cfg.vision.d_vision, d), (None, "embed"))
+    else:  # dense / audio
+        L = cfg.n_layers
+        defs["layers"] = {**attn_defs(cfg, L), **mlp_defs(cfg, L)}
+    return defs
+
+
+# --------------------------------------------------------------------------- #
+# blocks (single layer, weights WITHOUT the leading L dim)
+# --------------------------------------------------------------------------- #
+
+
+def _proj_qkv(cfg: ModelConfig, p: dict, x: jax.Array):
+    q = mm("bsd,dhk->bshk", x, p["wq"])
+    k = mm("bsd,dhk->bshk", x, p["wk"])
+    v = mm("bsd,dhk->bshk", x, p["wv"])
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    return q, k, v
+
+
+def self_attn_block(cfg: ModelConfig, p: dict, h: jax.Array, positions: jax.Array, mesh=None):
+    """Full-sequence causal self-attention sublayer. Returns (out, (k, v))."""
+    x = rms_norm(h, p["ln1"], cfg.norm_eps)
+    q, k, v = _proj_qkv(cfg, p, x)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    q = constrain(q, mesh, ("pod", "data"), None, "model", None)
+    k = constrain(k, mesh, ("pod", "data"), None, "model", None)
+    o = attention(q, k, v, causal=True, use_flash=False)
+    B, S = h.shape[:2]
+    out = mm("bshk,hkd->bsd", o, p["wo"].reshape(cfg.n_heads, cfg.hd, -1))
+    return out, (k, v)
+
+
+def self_attn_decode(cfg: ModelConfig, p: dict, h: jax.Array, k_cache, v_cache, lens, mesh=None):
+    """One-token self-attention against a KV cache. h: [B, 1, d]; lens: [B]
+    per-slot valid lengths (the new token lands at position lens[b]).
+    Returns (out, new_k_cache, new_v_cache)."""
+    B = h.shape[0]
+    x = rms_norm(h, p["ln1"], cfg.norm_eps)
+    q, k, v = _proj_qkv(cfg, p, x)
+    pos = jnp.reshape(lens, (B, 1))
+    q = apply_rope(q, pos, cfg.rope_theta)
+    k = apply_rope(k, pos, cfg.rope_theta)
+    # per-slot insert at lens[b]
+    bidx = jnp.arange(B)
+    k_cache = k_cache.at[bidx, lens].set(k[:, 0].astype(k_cache.dtype), mode="drop")
+    v_cache = v_cache.at[bidx, lens].set(v[:, 0].astype(v_cache.dtype), mode="drop")
+    o = decode_attention(
+        jnp.swapaxes(q, 1, 2),
+        jnp.swapaxes(k_cache, 1, 2).astype(q.dtype),
+        jnp.swapaxes(v_cache, 1, 2).astype(q.dtype),
+        lens + 1,
+    )
+    o = jnp.swapaxes(o, 1, 2)
+    out = mm("bshk,hkd->bsd", o, p["wo"].reshape(cfg.n_heads, cfg.hd, -1))
+    return out, k_cache, v_cache
+
+
+def cross_attn_block(cfg: ModelConfig, p: dict, h: jax.Array, kv_k, kv_v, mesh=None):
+    """Cross-attention against precomputed vision K/V [B, P, KV, hd]."""
+    x = rms_norm(h, p["ln1"], cfg.norm_eps)
+    q = mm("bsd,dhk->bshk", x, p["wq"])
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(x.dtype)
+    o = attention(q, kv_k.astype(q.dtype), kv_v.astype(q.dtype), causal=False, use_flash=False)
+    out = mm("bshk,hkd->bsd", o, p["wo"].reshape(cfg.n_heads, cfg.hd, -1))
+    return out
+
+
+def vision_kv(cfg: ModelConfig, p: dict, vis: jax.Array):
+    """K/V from projected vision embeddings for ONE cross layer."""
+    k = mm("bpd,dhk->bphk", vis, p["wk"])
+    v = mm("bpd,dhk->bphk", vis, p["wv"])
+    if cfg.qkv_bias:
+        k = k + p["bk"].astype(vis.dtype)
+        v = v + p["bv"].astype(vis.dtype)
+    return k, v
+
+
+def mlp_block(cfg: ModelConfig, p: dict, h: jax.Array, mesh=None):
+    x = rms_norm(h, p["ln2"], cfg.norm_eps)
+    g = mm("bsd,df->bsf", x, p["w_gate"])
+    g = constrain(g, mesh, ("pod", "data"), None, "model")
+    up = None
+    if cfg.mlp_type == "swiglu":
+        up = mm("bsd,df->bsf", x, p["w_up"])
+    a = mlp_act(g, up, cfg.mlp_type)
+    return mm("bsf,fd->bsd", a, p["w_down"])
+
+
+def moe_block(cfg: ModelConfig, p: dict, h: jax.Array, mesh=None):
+    from repro.models.moe import moe_ffn_shardmap
+    from repro.models.sharding import fsdp_axes_for
+
+    B, S, d = h.shape
+    x = rms_norm(h, p["ln2"], cfg.norm_eps)
+    if mesh is not None and not mesh.empty and "model" in mesh.axis_names:
+        out = moe_ffn_shardmap(
+            x.reshape(B * S, d),
+            p["router"], p["w_gate"], p["w_up"], p["w_down"],
+            top_k=cfg.moe.top_k,
+            capacity_factor=cfg.moe.capacity_factor,
+            mlp_kind=cfg.mlp_type,
+            mesh=mesh,
+            fsdp_axes=fsdp_axes_for(cfg),
+            compute_dtype=jnp.dtype(cfg.dtype),
+        )
+    else:
+        out = moe_ffn(
+            x.reshape(B * S, d),
+            p["router"], p["w_gate"], p["w_up"], p["w_down"],
+            top_k=cfg.moe.top_k,
+            capacity_factor=cfg.moe.capacity_factor,
+            mlp_kind=cfg.mlp_type,
+            mesh=mesh,
+        )
+    return out.y.reshape(B, S, d).astype(h.dtype), out.aux_loss, out.z_loss
+
+
+# --------------------------------------------------------------------------- #
+# embedding / head / loss
+# --------------------------------------------------------------------------- #
+
+
+def embed_tokens(cfg: ModelConfig, params: dict, tokens: jax.Array, dtype) -> jax.Array:
+    """tokens: [B, S] or [B, S, ncb] (audio). Sum of codebook embeddings."""
+    emb = params["embed"]
+    if cfg.audio:
+        out = 0.0
+        for c in range(cfg.audio.n_codebooks):
+            out = out + jnp.take(emb[c], tokens[..., c], axis=0)
+        return out.astype(dtype)
+    return jnp.take(emb[0], tokens, axis=0).astype(dtype)
+
+
+def lm_logits(cfg: ModelConfig, params: dict, h: jax.Array, mesh=None) -> jax.Array:
+    """[B, S, d] -> [B, S, (ncb,) V] fp32 logits."""
+    from repro.models.sharding import constrain_logical
+
+    hn = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,cdv->bscv", hn, params["lm_head"].astype(hn.dtype))
+    logits = constrain_logical(logits, mesh, "batch", None, None, "vocab")
+    if not cfg.audio:
+        logits = logits[:, :, 0, :]
+    return logits.astype(jnp.float32)
+
+
+def xent_loss(logits: jax.Array, labels: jax.Array, ignore: int = -1):
+    """Mean token cross-entropy; labels broadcast against [..., V] logits."""
+    V = logits.shape[-1]
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None].clip(0), axis=-1)[..., 0]
+    mask = (labels != ignore).astype(jnp.float32)
+    loss = jnp.sum((lse - gold) * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return loss
+
+
+def chunked_xent(cfg: ModelConfig, params: dict, h: jax.Array, labels: jax.Array,
+                 mesh=None, chunk: int = 256, ignore: int = -1):
+    """Cross-entropy WITHOUT materializing [B, S, V] logits.
+
+    The head matmul + softmax run per sequence-chunk inside a checkpointed
+    scan, so peak logits memory is [B, chunk, V] — decisive when V doesn't
+    divide the model axis (granite's 49155) and the full fp32 logits would
+    be ~13 GB/device. Identical value+grads to xent_loss(lm_logits(h))."""
+    B, S, d = h.shape
+    c = min(chunk, S)
+    while S % c:
+        c -= 1
+    nc = S // c
+    hb = jnp.moveaxis(h.reshape(B, nc, c, d), 1, 0)  # [nc, B, c, d]
+    lb = jnp.moveaxis(labels.reshape((B, nc, c) + labels.shape[2:]), 1, 0)
+
+    def body(acc, xs):
+        hc, lc = xs
+        logits = lm_logits(cfg, params, hc, mesh)  # [B, c, (ncb,) V] fp32
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lc[..., None].clip(0), axis=-1)[..., 0]
+        mask = (lc != ignore).astype(jnp.float32)
+        return (acc[0] + jnp.sum((lse - gold) * mask), acc[1] + jnp.sum(mask)), None
+
+    (tot, cnt), _ = jax.lax.scan(
+        jax.checkpoint(body), (jnp.float32(0.0), jnp.float32(0.0)), (hb, lb)
+    )
+    return tot / jnp.maximum(cnt, 1.0)

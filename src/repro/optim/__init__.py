@@ -1,0 +1,15 @@
+from repro.optim.adamw import (  # noqa: F401
+    AdamWConfig,
+    Q8,
+    adamw_update,
+    global_norm,
+    init_opt_state,
+    q8_dequantize,
+    q8_quantize,
+)
+from repro.optim.grad_compress import (  # noqa: F401
+    compressed_psum,
+    ef_compress_tree,
+    init_error_buffer,
+)
+from repro.optim.schedule import constant, inverse_sqrt, warmup_cosine  # noqa: F401

@@ -1,0 +1,27 @@
+"""LR schedules (multiplier form: step -> factor in [0, 1])."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(warmup: int, total: int, min_frac: float = 0.1):
+    def f(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = step / jnp.maximum(warmup, 1)
+        prog = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+        cos = min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup, warm, cos)
+
+    return f
+
+
+def constant():
+    return lambda step: jnp.float32(1.0)
+
+
+def inverse_sqrt(warmup: int):
+    def f(step):
+        step = jnp.asarray(step, jnp.float32)
+        return jnp.minimum(step / jnp.maximum(warmup, 1), jnp.sqrt(warmup / jnp.maximum(step, 1)))
+
+    return f

@@ -1,0 +1,135 @@
+"""Serving engine: continuous batching over fixed decode slots.
+
+Two jit'd programs (the same ones the dry-run lowers):
+  * prefill(params, tokens)            -> last-token logits + per-slot cache
+  * decode_step(params, tokens, cache) -> next-token logits + updated cache
+
+The engine multiplexes requests onto ``slots`` decode lanes: a free slot is
+prefilled with an incoming prompt (cache rows for that slot are swapped in),
+then joins the batched decode step; finished sequences (eos / max_tokens)
+free their slot.  Per-slot cache lengths make ragged decoding exact.
+
+Sampling: greedy or temperature, seeded per request (deterministic replay).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model import Model
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray  # [S] or [S, ncb]
+    max_tokens: int = 32
+    temperature: float = 0.0
+    eos: Optional[int] = None
+    seed: int = 0
+    # filled by the engine
+    generated: list = field(default_factory=list)
+    done: bool = False
+    t_submit: float = 0.0
+    t_first: float = 0.0
+    t_done: float = 0.0
+
+
+class Engine:
+    def __init__(self, model: Model, params, *, slots: int = 4, max_len: int = 512, mesh=None):
+        self.model, self.params = model, params
+        self.slots, self.max_len = slots, max_len
+        self.mesh = mesh
+        cfg = model.cfg
+        self._prefill = jax.jit(
+            lambda p, t, v=None: model.prefill(p, t, max_len=max_len, vision=v, mesh=mesh)
+        )
+        self._decode = jax.jit(
+            lambda p, t, c: model.decode_step(p, t, c, mesh=mesh), donate_argnums=(2,)
+        )
+        self.cache = model.init_cache(slots, max_len)
+        self.slot_req: list[Optional[Request]] = [None] * slots
+        self.queue: list[Request] = []
+        self.finished: list[Request] = []
+        self._next_tok = np.zeros(
+            (slots, 1, cfg.audio.n_codebooks) if cfg.audio else (slots, 1), np.int32
+        )
+        self._active_any = False
+
+    # ------------------------------------------------------------ intake --
+    def submit(self, req: Request):
+        req.t_submit = time.time()
+        self.queue.append(req)
+
+    # ------------------------------------------------------- cache plumb --
+    def _write_slot(self, slot: int, src_cache, src_b: int = 0):
+        """Copy one request's prefill cache (batch 1) into slot ``slot``."""
+        def wr(dst, src):
+            if dst.ndim == 1:  # len
+                return dst.at[slot].set(src[src_b])
+            # batch dim position differs per leaf kind: [L, B, ...] vs [B]
+            return dst.at[:, slot].set(src[:, src_b])
+
+        self.cache = jax.tree.map(wr, self.cache, src_cache)
+
+    # --------------------------------------------------------------- step --
+    def step(self):
+        """One engine iteration: admit + prefill new requests, then one
+        batched decode step for all active slots."""
+        cfg = self.model.cfg
+        # admit
+        for slot in range(self.slots):
+            if self.slot_req[slot] is None and self.queue:
+                req = self.queue.pop(0)
+                toks = jnp.asarray(req.prompt)[None]
+                vis = None
+                if cfg.vision:
+                    vis = jnp.zeros((1, cfg.vision.n_patches, cfg.vision.d_vision), jnp.float32)
+                logits, cache1 = self._prefill(self.params, toks, vis)
+                self._write_slot(slot, cache1)
+                tok = self._sample(req, np.asarray(logits)[0])
+                req.t_first = time.time()
+                req.generated.append(tok)
+                self._next_tok[slot] = np.asarray(tok).reshape(self._next_tok[slot].shape)
+                self.slot_req[slot] = req
+        active = [s for s in range(self.slots) if self.slot_req[s] is not None]
+        if not active:
+            return False
+        # batched decode (inactive slots decode garbage into their own lane)
+        logits, self.cache = self._decode(self.params, jnp.asarray(self._next_tok), self.cache)
+        logits = np.asarray(logits)
+        for slot in active:
+            req = self.slot_req[slot]
+            tok = self._sample(req, logits[slot])
+            req.generated.append(tok)
+            self._next_tok[slot] = np.asarray(tok).reshape(self._next_tok[slot].shape)
+            done = len(req.generated) >= req.max_tokens or (
+                req.eos is not None and np.all(np.asarray(tok) == req.eos)
+            )
+            if done:
+                req.done = True
+                req.t_done = time.time()
+                self.finished.append(req)
+                self.slot_req[slot] = None
+        return True
+
+    def run(self, max_steps: int = 10_000):
+        steps = 0
+        while (self.queue or any(r is not None for r in self.slot_req)) and steps < max_steps:
+            self.step()
+            steps += 1
+        return self.finished
+
+    # ------------------------------------------------------------ sample --
+    def _sample(self, req: Request, logits: np.ndarray):
+        """logits: [V] or [ncb, V]."""
+        if req.temperature <= 0.0:
+            return logits.argmax(-1).astype(np.int32)
+        key = jax.random.PRNGKey(req.seed + len(req.generated))
+        g = np.asarray(jax.random.gumbel(key, logits.shape))
+        return (logits / req.temperature + g).argmax(-1).astype(np.int32)

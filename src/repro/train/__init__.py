@@ -1,0 +1,7 @@
+from repro.train.train_step import (  # noqa: F401
+    TrainConfig,
+    abstract_train_state,
+    init_train_state,
+    make_train_step,
+)
+from repro.train.trainer import Trainer, TrainerConfig  # noqa: F401

@@ -1,0 +1,91 @@
+"""pjit train step: loss -> grad -> AdamW, with microbatch gradient
+accumulation and optional error-feedback int8 gradient compression.
+
+``make_train_step`` returns a function (state, batch) -> (state, metrics)
+suitable for jax.jit with donated state.  Gradient accumulation runs as a
+lax.scan over microbatches; with accumulation the DP all-reduce of
+microbatch i overlaps the compute of microbatch i+1 under XLA's
+latency-hiding scheduler (enabled via flags in launch/train.py).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model import Model
+from repro.optim.adamw import AdamWConfig, adamw_update, init_opt_state
+from repro.optim.grad_compress import ef_compress_tree, init_error_buffer
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    microbatches: int = 1
+    compress_grads: bool = False
+
+
+def init_train_state(model: Model, key, opt_cfg: AdamWConfig, tcfg: TrainConfig = TrainConfig()):
+    params = model.init(key)
+    state = {"params": params, "opt": init_opt_state(params, opt_cfg), "step": jnp.zeros((), jnp.int32)}
+    if tcfg.compress_grads:
+        state["ef_err"] = init_error_buffer(params)
+    return state
+
+
+def abstract_train_state(model: Model, opt_cfg: AdamWConfig, tcfg: TrainConfig = TrainConfig()):
+    """ShapeDtypeStruct train state — dry-run path, no allocation."""
+    params = model.abstract_params()
+
+    def build():
+        p = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), params)
+        st = {"params": p, "opt": init_opt_state(p, opt_cfg), "step": jnp.zeros((), jnp.int32)}
+        if tcfg.compress_grads:
+            st["ef_err"] = init_error_buffer(p)
+        return st
+
+    return jax.eval_shape(build)
+
+
+def make_train_step(model: Model, opt_cfg: AdamWConfig, tcfg: TrainConfig = TrainConfig(), mesh=None):
+    def loss_fn(params, batch):
+        return model.loss(params, batch, mesh=mesh)
+
+    def train_step(state, batch):
+        params = state["params"]
+        mb = tcfg.microbatches
+        if mb == 1:
+            (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+        else:
+            def slice_mb(x, i):
+                return x.reshape((mb, x.shape[0] // mb) + x.shape[1:])[i]
+
+            def mb_body(acc, i):
+                sub = jax.tree.map(lambda x: slice_mb(x, i), batch)
+                (l, m), g = jax.value_and_grad(loss_fn, has_aux=True)(params, sub)
+                acc = jax.tree.map(jnp.add, acc, {"g": g, "l": l, "m": m})
+                return acc, None
+
+            zero = jax.eval_shape(lambda p, b: jax.value_and_grad(loss_fn, has_aux=True)(p, b),
+                                  params, jax.tree.map(lambda x: jax.ShapeDtypeStruct((x.shape[0] // mb,) + x.shape[1:], x.dtype), batch))
+            acc0 = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                                {"g": zero[1], "l": zero[0][0], "m": zero[0][1]})
+            acc, _ = jax.lax.scan(mb_body, acc0, jnp.arange(mb))
+            grads = jax.tree.map(lambda x: x / mb, acc["g"])
+            loss = acc["l"] / mb
+            metrics = jax.tree.map(lambda x: x / mb, acc["m"])
+
+        if tcfg.compress_grads:
+            grads, new_err = ef_compress_tree(grads, state["ef_err"])
+
+        params, opt, opt_metrics = adamw_update(params, grads, state["opt"], opt_cfg)
+        new_state = {"params": params, "opt": opt, "step": state["step"] + 1}
+        if tcfg.compress_grads:
+            new_state["ef_err"] = new_err
+        metrics = {**metrics, **opt_metrics, "total_loss": loss}
+        return new_state, metrics
+
+    return train_step

@@ -1,0 +1,28 @@
+"""The 10 assigned LM architectures as DRAGON workload DFGs.
+
+This is role (1) of the assigned architectures (DESIGN.md §4): each
+(arch x shape) cell becomes an operator-level dataflow graph consumed by
+DSim/DOpt.  Role (2) — the real runnable JAX models — lives in
+``repro.models``; tests cross-check the two.
+"""
+from __future__ import annotations
+
+from repro.configs import SHAPES, all_archs, get_config
+from repro.core.graph import Graph
+from repro.core.trace import trace_lm
+
+
+def lm_cell(arch: str, shape: str) -> Graph:
+    """DFG for one (architecture x shape) cell."""
+    return trace_lm(get_config(arch), SHAPES[shape])
+
+
+def lm_workloads(shape: str = "train_4k", archs: list[str] | None = None) -> dict[str, Graph]:
+    """All assigned architectures traced at one shape (runnable cells only)."""
+    out = {}
+    for a in archs or all_archs():
+        cfg = get_config(a)
+        if shape == "long_500k" and not cfg.subquadratic():
+            continue
+        out[a] = trace_lm(cfg, SHAPES[shape])
+    return out

@@ -1,0 +1,20 @@
+import os
+import sys
+
+# tests must see the real (1-device) CPU platform — the 512-device flag is
+# reserved for launch/dryrun.py. Keep determinism.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax
+import pytest
+
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+def pytest_configure(config):
+    config.addinivalue_line("markers", "slow: long-running test (full smoke matrix)")

@@ -1,0 +1,202 @@
+"""DRAGON core (DGen + DSim + mapper) behaviour and invariants."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    ArchParams,
+    ArchSpec,
+    GraphBuilder,
+    TechParams,
+    map_workload,
+    simulate,
+    specialize,
+    workload_optimize,
+)
+from repro.core.graph import MATMUL, ELEMWISE, compute_merge
+from repro.core.mapper import MapperCfg, ceil_ste, gate_below_ste
+from repro.workloads import get_workload
+
+
+def small_graph():
+    b = GraphBuilder()
+    b.add("mm1", MATMUL, 2 * 512 * 512 * 512, gbuf_read=2 * 512 * 512 * 2,
+          gbuf_write=512 * 512 * 2, main_read=512 * 512 * 2, alloc=3 * 512 * 512 * 2,
+          dims=(512, 512, 512))
+    b.add("act", ELEMWISE, 512 * 512 * 4, gbuf_read=512 * 512 * 2,
+          gbuf_write=512 * 512 * 2, alloc=2 * 512 * 512 * 2, dims=(512 * 512, 1, 1))
+    return b.build()
+
+
+class TestDGen:
+    def test_specialize_finite_positive(self):
+        chw = specialize(TechParams.default(), ArchParams.default())
+        for leaf in jax.tree.leaves(chw):
+            assert jnp.all(jnp.isfinite(leaf))
+        assert float(chw.total_area) > 0
+        assert float(chw.frequency) > 0
+
+    def test_frequency_capped_by_critical_path(self):
+        arch = dataclasses.replace(ArchParams.default(), frequency=jnp.float32(1e12))
+        chw = specialize(TechParams.default(), arch)
+        assert float(chw.frequency) < 1e12  # timing-feasibility clamp
+
+    def test_smaller_node_is_faster_and_denser(self):
+        t40 = TechParams.default()
+        t7 = dataclasses.replace(t40, node=jnp.full(4, 7.0), peripheral_node=jnp.full(3, 7.0))
+        c40 = specialize(t40, ArchParams.default())
+        c7 = specialize(t7, ArchParams.default())
+        assert float(c7.frequency) > float(c40.frequency)
+        assert float(jnp.sum(c7.comp_area)) < float(jnp.sum(c40.comp_area))
+
+    def test_memtype_changes_metrics(self):
+        sram = specialize(TechParams.default(), ArchParams.default(),
+                          ArchSpec(mem_type=("sram", "sram", "dram")))
+        rram = specialize(TechParams.default(), ArchParams.default(),
+                          ArchSpec(mem_type=("sram", "rram", "dram")))
+        assert float(rram.write_latency[1]) > float(sram.write_latency[1])
+
+
+class TestDSim:
+    def test_measurements_positive(self):
+        perf = simulate(TechParams.default(), ArchParams.default(), small_graph())
+        for v in perf.measurements().values():
+            assert float(v) > 0 and np.isfinite(float(v))
+
+    def test_power_runtime_energy_consistent(self):
+        perf = simulate(TechParams.default(), ArchParams.default(), small_graph())
+        assert float(perf.power) == pytest.approx(
+            float(perf.energy) / float(perf.runtime), rel=1e-5
+        )
+        assert float(perf.edp) == pytest.approx(
+            float(perf.energy) * float(perf.runtime), rel=1e-5
+        )
+
+    def test_energy_decomposition(self):
+        perf = simulate(TechParams.default(), ArchParams.default(), small_graph())
+        assert float(perf.energy) == pytest.approx(
+            float(perf.energy_mem + perf.energy_comp + perf.energy_leak), rel=1e-5
+        )
+
+    def test_runtime_monotone_in_cell_latency(self):
+        g = get_workload("lstm")
+        base = TechParams.default()
+        slow = dataclasses.replace(base, cell_read_latency=base.cell_read_latency * 10)
+        r0 = float(simulate(base, ArchParams.default(), g).runtime)
+        r1 = float(simulate(slow, ArchParams.default(), g).runtime)
+        assert r1 >= r0
+
+    def test_energy_monotone_in_read_power(self):
+        g = get_workload("lstm")
+        base = TechParams.default()
+        hot = dataclasses.replace(base, cell_read_power=base.cell_read_power * 5)
+        e0 = float(simulate(base, ArchParams.default(), g).energy)
+        e1 = float(simulate(hot, ArchParams.default(), g).energy)
+        assert e1 > e0
+
+    def test_bigger_systolic_array_not_slower_on_big_matmuls(self):
+        g = small_graph()
+        a_small = dataclasses.replace(ArchParams.default(), sys_arr_x=jnp.float32(32.0),
+                                      sys_arr_y=jnp.float32(32.0))
+        a_big = dataclasses.replace(ArchParams.default(), sys_arr_x=jnp.float32(256.0),
+                                    sys_arr_y=jnp.float32(256.0))
+        r_small = float(simulate(TechParams.default(), a_small, g).runtime)
+        r_big = float(simulate(TechParams.default(), a_big, g).runtime)
+        assert r_big <= r_small * 1.01
+
+    def test_grad_matches_finite_difference(self):
+        """The paper's central claim: gradients through the mapper are correct."""
+        g = get_workload("lstm")
+
+        def f(x):
+            tech = TechParams.default()
+            tech = dataclasses.replace(
+                tech, cell_read_power=tech.cell_read_power.at[1].mul(x)
+            )
+            return simulate(tech, ArchParams.default(), g).energy
+
+        x0 = jnp.float32(1.3)
+        grad = float(jax.grad(f)(x0))
+        # energy is linear in read_power, so a large central difference is
+        # exact and beats fp32 cancellation noise
+        eps = 0.25
+        fd = (float(f(x0 + eps)) - float(f(x0 - eps))) / (2 * eps)
+        assert grad == pytest.approx(fd, rel=2e-2)
+
+    def test_jit_vmap_composable(self):
+        g = small_graph()
+        techs = jax.vmap(
+            lambda s: dataclasses.replace(
+                TechParams.default(),
+                cell_read_latency=TechParams.default().cell_read_latency * s,
+            )
+        )(jnp.linspace(0.5, 2.0, 4))
+        f = jax.jit(jax.vmap(lambda t: simulate(t, ArchParams.default(), g).runtime))
+        out = f(techs)
+        assert out.shape == (4,)
+        assert bool(jnp.all(jnp.diff(out) >= 0))  # monotone in latency scale
+
+
+class TestMapper:
+    def test_tiles_are_integers(self):
+        ms = map_workload(
+            specialize(TechParams.default(), ArchParams.default()), small_graph()
+        )
+        assert float(ms.n_tiles) == int(ms.n_tiles)
+
+    def test_tiling_triggers_when_over_capacity(self):
+        arch = ArchParams.default()
+        tiny = dataclasses.replace(arch, capacity=arch.capacity.at[1].set(64 * 1024.0))
+        chw_big = specialize(TechParams.default(), arch)
+        chw_tiny = specialize(TechParams.default(), tiny)
+        g = small_graph()
+        assert float(map_workload(chw_tiny, g).n_tiles) > float(map_workload(chw_big, g).n_tiles)
+
+    def test_prefetch_hides_main_memory_time(self):
+        chw = specialize(TechParams.default(), ArchParams.default())
+        g = small_graph()
+        on = map_workload(chw, g, MapperCfg(prefetch=True, streaming=True))
+        off = map_workload(chw, g, MapperCfg(prefetch=False, streaming=False))
+        assert float(on.cycles) <= float(off.cycles)
+        assert float(off.t_exposed_main) >= float(on.t_exposed_main)
+
+    def test_ceil_ste_forward_exact_backward_smooth(self):
+        x = jnp.float32(3.4)
+        assert float(ceil_ste(x)) == 4.0
+        assert float(jax.grad(lambda v: ceil_ste(v))(x)) == 1.0
+
+    def test_gate_ste_hard_forward(self):
+        assert float(gate_below_ste(jnp.float32(0.5), jnp.float32(1.0))) == 1.0
+        assert float(gate_below_ste(jnp.float32(1.5), jnp.float32(1.0))) == 0.0
+
+
+class TestGraphOpt:
+    def test_compute_merge_preserves_totals(self):
+        g = get_workload("lstm")
+        merged = compute_merge(g, flops_threshold=1e9)
+        assert merged.n_vertices <= g.n_vertices
+        np.testing.assert_allclose(
+            np.asarray(merged.n_comp).sum(), np.asarray(g.n_comp).sum(), rtol=1e-6
+        )
+        np.testing.assert_allclose(
+            np.asarray(merged.n_read).sum(), np.asarray(g.n_read).sum(), rtol=1e-6
+        )
+
+    def test_merge_reduces_mapper_overhead(self):
+        g = get_workload("lstm")
+        chw = specialize(TechParams.default(), ArchParams.default())
+        merged = workload_optimize(g, merge_threshold=1e8)
+        r_m = float(map_workload(chw, merged).cycles)
+        r_g = float(map_workload(chw, g).cycles)
+        assert r_m <= r_g * 1.05  # merging never makes it much worse
+
+    def test_pad_to(self):
+        g = small_graph()
+        p = g.pad_to(10)
+        assert p.n_vertices == 10
+        np.testing.assert_allclose(
+            np.asarray(p.n_comp).sum(), np.asarray(g.n_comp).sum(), rtol=1e-6
+        )

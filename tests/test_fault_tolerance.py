@@ -1,0 +1,86 @@
+"""Fault tolerance: crash/restart recovery, straggler detection, exact
+resume semantics (the restored run must replay the identical data stream)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.base import ShapeConfig
+from repro.ft import FailureInjector, SimulatedFailure, StragglerMonitor
+from repro.models import build_model
+from repro.optim import AdamWConfig
+from repro.train import TrainConfig, Trainer, TrainerConfig
+
+
+SHAPE = ShapeConfig("tiny", 64, 4, "train")
+
+
+def make_trainer(tmp_path, steps=12, injector=None, seed_cfg="granite-3-8b"):
+    cfg = get_config(seed_cfg).reduced()
+    m = build_model(cfg)
+    return Trainer(
+        m, SHAPE, AdamWConfig(lr=1e-3, schedule=None), TrainConfig(),
+        TrainerConfig(steps=steps, ckpt_every=4, ckpt_dir=str(tmp_path), log_every=0),
+        injector=injector, log_fn=lambda s: None,
+    )
+
+
+class TestCrashRecovery:
+    def test_restart_resumes_and_finishes(self, tmp_path):
+        tr = make_trainer(tmp_path, injector=FailureInjector(fail_at=(6,)))
+        out = tr.run()
+        assert int(out["state"]["step"]) == 12
+        assert out["losses"][-1] < out["losses"][0]
+
+    def test_too_many_failures_raise(self, tmp_path):
+        inj = FailureInjector(fail_at=(5,))
+        inj.fired = set()
+
+        class AlwaysFail(FailureInjector):
+            def maybe_fail(self, step):
+                if step == 5:
+                    raise SimulatedFailure("persistent failure")
+
+        tr = make_trainer(tmp_path, injector=AlwaysFail())
+        with pytest.raises(SimulatedFailure):
+            tr.run()
+
+    def test_resume_replays_identical_stream(self, tmp_path):
+        """Run A: uninterrupted. Run B: crash at step 6, restore from step 4.
+        Both must end with identical parameters (deterministic data + ckpt)."""
+        tr_a = make_trainer(tmp_path / "a", steps=10)
+        out_a = tr_a.run()
+        tr_b = make_trainer(tmp_path / "b", steps=10,
+                            injector=FailureInjector(fail_at=(6,)))
+        out_b = tr_b.run()
+        for x, y in zip(
+            jax.tree.leaves(out_a["state"]["params"]),
+            jax.tree.leaves(out_b["state"]["params"]),
+        ):
+            np.testing.assert_allclose(np.asarray(x, np.float32),
+                                       np.asarray(y, np.float32), atol=1e-6)
+
+
+class TestStragglerMonitor:
+    def test_flags_outlier(self):
+        mon = StragglerMonitor(warmup_steps=3)
+        for i in range(10):
+            assert not mon.record(i, 0.10 + 0.001 * (i % 2))
+        assert mon.record(10, 0.50)  # 5x slower
+        assert mon.flagged and mon.flagged[0][0] == 10
+
+    def test_adapts_to_new_regime(self):
+        mon = StragglerMonitor(warmup_steps=3)
+        for i in range(8):
+            mon.record(i, 0.1)
+        mon.record(8, 0.5)  # flagged
+        for i in range(9, 40):
+            mon.record(i, 0.5)  # new normal
+        assert not mon.record(40, 0.52)
+
+    def test_injected_slow_steps_detected_in_training(self, tmp_path):
+        tr = make_trainer(tmp_path, steps=14,
+                          injector=FailureInjector(slow_at=(10,), slow_secs=3.0))
+        out = tr.run()
+        assert any(s == 10 for s, _ in out["stragglers"]), out["stragglers"]

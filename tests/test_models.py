@@ -1,0 +1,137 @@
+"""Per-arch smoke tests (reduced configs, CPU) + decode/prefill consistency.
+
+Every assigned architecture: instantiate a reduced same-family config, run
+one forward/train step, assert output shapes + finiteness; then verify the
+serving path (prefill + decode with KV/SSM caches) matches the full forward
+position-by-position — the strongest end-to-end correctness property the
+zoo has.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import SHAPES, all_archs, cell_status, get_config
+from repro.models import build_model
+from repro.models.defs import param_count as defs_param_count
+
+
+def batch_for(cfg, key, B=2, S=16):
+    shape = (B, S, cfg.audio.n_codebooks) if cfg.audio else (B, S)
+    tokens = jax.random.randint(key, shape, 0, cfg.vocab_size)
+    batch = {"tokens": tokens, "labels": tokens}
+    if cfg.vision:
+        batch["vision"] = jax.random.normal(
+            key, (B, cfg.vision.n_patches, cfg.vision.d_vision)
+        )
+    return batch
+
+
+@pytest.mark.parametrize("arch", all_archs())
+class TestArchSmoke:
+    def test_forward_and_loss(self, arch, rng):
+        cfg = get_config(arch).reduced()
+        m = build_model(cfg)
+        params = m.init(rng)
+        batch = batch_for(cfg, rng)
+        loss, metrics = jax.jit(lambda p, b: m.loss(p, b))(params, batch)
+        assert jnp.isfinite(loss), arch
+        assert float(loss) > 0
+        logits, _, _ = m.forward(params, batch["tokens"], vision=batch.get("vision"))
+        expect = (2, 16, cfg.audio.n_codebooks, cfg.vocab_size) if cfg.audio \
+            else (2, 16, cfg.vocab_size)
+        assert logits.shape == expect
+        assert bool(jnp.isfinite(logits).all())
+
+    def test_train_step_reduces_loss(self, arch, rng):
+        from repro.optim import AdamWConfig
+        from repro.train import TrainConfig, init_train_state, make_train_step
+
+        cfg = get_config(arch).reduced()
+        m = build_model(cfg)
+        step = jax.jit(make_train_step(m, AdamWConfig(lr=5e-3, schedule=None)))
+        state = init_train_state(m, rng, AdamWConfig(lr=5e-3))
+        batch = batch_for(cfg, rng)  # fixed batch: loss must drop
+        losses = []
+        for _ in range(5):
+            state, metrics = step(state, batch)
+            losses.append(float(metrics["total_loss"]))
+        assert losses[-1] < losses[0], (arch, losses)
+
+    def test_decode_matches_forward(self, arch, rng):
+        cfg = dataclasses.replace(get_config(arch).reduced(), dtype="float32")
+        m = build_model(cfg)
+        params = m.init(rng)
+        B, S, t0 = 2, 12, 8
+        batch = batch_for(cfg, rng, B, S)
+        tokens = batch["tokens"]
+        vision = batch.get("vision")
+        logits_full, _, _ = m.forward(params, tokens, vision=vision)
+        _, cache = m.prefill(params, tokens[:, :t0], max_len=S + 4, vision=vision)
+        for t in range(t0, S):
+            lg, cache = m.decode_step(params, tokens[:, t : t + 1], cache)
+            np.testing.assert_allclose(
+                np.asarray(lg), np.asarray(logits_full[:, t]), atol=5e-4,
+                err_msg=f"{arch} step {t}",
+            )
+
+
+@pytest.mark.parametrize("arch", all_archs())
+def test_param_count_matches_defs(arch):
+    """configs/base.py closed-form param_count == declared ParamDef tree."""
+    cfg = get_config(arch)
+    m = build_model(cfg)
+    assert m.param_count() == cfg.param_count(), arch
+
+
+def test_assigned_table_dimensions():
+    """The 10 configs carry exactly the assigned architecture table."""
+    expect = {
+        "musicgen-large": (48, 2048, 32, 32, 8192, 2048),
+        "minitron-8b": (32, 4096, 32, 8, 16384, 256000),
+        "qwen2.5-32b": (64, 5120, 40, 8, 27648, 152064),
+        "granite-3-8b": (40, 4096, 32, 8, 12800, 49155),
+        "phi4-mini-3.8b": (32, 3072, 24, 8, 8192, 200064),
+        "kimi-k2-1t-a32b": (61, 7168, 64, 8, 2048, 163840),
+        "llama4-scout-17b-a16e": (48, 5120, 40, 8, 8192, 202048),
+        "falcon-mamba-7b": (64, 4096, 0, 0, 0, 65024),
+        "llama-3.2-vision-11b": (40, 4096, 32, 8, 14336, 128256),
+        "zamba2-1.2b": (38, 2048, 32, 32, 8192, 32000),
+    }
+    for arch, (L, d, H, KV, ff, V) in expect.items():
+        cfg = get_config(arch)
+        assert cfg.n_layers == L and cfg.d_model == d and cfg.vocab_size == V, arch
+        if cfg.family != "ssm":
+            assert cfg.n_heads == H and cfg.n_kv_heads == KV, arch
+        if cfg.family not in ("ssm",):
+            assert cfg.d_ff == ff, arch
+    # MoE / SSM extras
+    k2 = get_config("kimi-k2-1t-a32b").moe
+    assert (k2.n_experts, k2.top_k) == (384, 8)
+    l4 = get_config("llama4-scout-17b-a16e").moe
+    assert (l4.n_experts, l4.top_k) == (16, 1)
+    assert get_config("falcon-mamba-7b").ssm.d_state == 16
+    assert get_config("zamba2-1.2b").ssm.d_state == 64
+
+
+def test_cell_grid_is_40_with_documented_skips():
+    from repro.configs import all_cells
+
+    cells = all_cells()
+    assert len(cells) == 40
+    skips = [c for c in cells if c[2] != "run"]
+    assert len(skips) == 8  # long_500k x 8 full-attention archs
+    assert all(c[1] == "long_500k" for c in skips)
+    runs = {(a, s) for a, s, st in cells if st == "run"}
+    assert ("falcon-mamba-7b", "long_500k") in runs
+    assert ("zamba2-1.2b", "long_500k") in runs
+
+
+def test_kimi_param_count_is_a_trillion():
+    cfg = get_config("kimi-k2-1t-a32b")
+    n = cfg.param_count()
+    assert 0.9e12 < n < 1.3e12, n
+    active = cfg.active_param_count()
+    assert 25e9 < active < 40e9, active

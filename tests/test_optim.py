@@ -1,0 +1,125 @@
+"""Optimizer stack: AdamW, int8 moment states, EF gradient compression."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.optim import (
+    AdamWConfig,
+    adamw_update,
+    ef_compress_tree,
+    global_norm,
+    init_error_buffer,
+    init_opt_state,
+    q8_dequantize,
+    q8_quantize,
+    warmup_cosine,
+)
+
+
+def toy_loss(p):
+    return jnp.sum((p["w"] @ p["w"].T - jnp.eye(8)) ** 2)
+
+
+def run_adamw(int8: bool, steps=150, lr=1e-2):
+    p = {"w": jax.random.normal(jax.random.PRNGKey(1), (8, 300)) * 0.3}
+    cfg = AdamWConfig(lr=lr, weight_decay=0.0, int8_states=int8,
+                      schedule=warmup_cosine(10, steps))
+    st_ = init_opt_state(p, cfg)
+
+    @jax.jit
+    def step(p, st_):
+        g = jax.grad(toy_loss)(p)
+        return adamw_update(p, g, st_, cfg)
+
+    for _ in range(steps):
+        p, st_, _ = step(p, st_)
+    return float(toy_loss(p))
+
+
+class TestQ8:
+    @settings(max_examples=25, deadline=None)
+    @given(
+        rows=st.integers(1, 5),
+        cols=st.integers(1, 700),
+        scale=st.floats(1e-6, 1e6),
+        nonlinear=st.booleans(),
+    )
+    def test_roundtrip_error_bounded(self, rows, cols, scale, nonlinear):
+        x = jax.random.normal(jax.random.PRNGKey(rows * 1000 + cols), (rows, cols)) * scale
+        xr = q8_dequantize(q8_quantize(x, nonlinear=nonlinear), nonlinear=nonlinear)
+        # error per block bounded by absmax/127 (linear) or looser (quadratic
+        # map trades top-end precision for near-zero resolution)
+        bound = (np.abs(np.asarray(x)).max() / 127.0) * (4.0 if nonlinear else 1.01)
+        assert float(jnp.max(jnp.abs(x - xr))) <= bound + 1e-30
+
+    def test_zero_preserved(self):
+        x = jnp.zeros((3, 300))
+        assert float(jnp.abs(q8_dequantize(q8_quantize(x))).max()) == 0.0
+
+    def test_scale_shape_mirrors_leading_dims(self):
+        q = q8_quantize(jnp.ones((4, 7, 1000)))
+        assert q.codes.shape == (4, 7, 1000)
+        assert q.scale.shape == (4, 7, 4)  # ceil(1000/256)
+
+
+class TestAdamW:
+    def test_fp32_converges(self):
+        assert run_adamw(False) < 1e-4
+
+    def test_int8_parity(self):
+        assert run_adamw(True) < 1e-3  # within noise of fp32 path
+
+    def test_grad_clip_caps_update(self):
+        p = {"w": jnp.ones((4, 4))}
+        cfg = AdamWConfig(lr=1.0, grad_clip=1e-3, weight_decay=0.0, schedule=None)
+        st_ = init_opt_state(p, cfg)
+        g = {"w": jnp.full((4, 4), 1e6)}
+        p2, _, metrics = adamw_update(p, g, st_, cfg)
+        assert float(metrics["grad_norm"]) > 1e5
+        assert float(jnp.max(jnp.abs(p2["w"] - p["w"]))) < 10.0  # clipped
+
+    def test_weight_decay_shrinks(self):
+        p = {"w": jnp.ones((4, 4)) * 10}
+        cfg = AdamWConfig(lr=0.1, weight_decay=0.5, schedule=None)
+        st_ = init_opt_state(p, cfg)
+        p2, _, _ = adamw_update(p, {"w": jnp.zeros((4, 4))}, st_, cfg)
+        assert float(jnp.max(p2["w"])) < 10.0
+
+
+class TestEFCompression:
+    def test_error_feedback_unbiased_over_time(self):
+        """Sum of (compressed + carried error) telescopes to the true sum."""
+        key = jax.random.PRNGKey(0)
+        err = init_error_buffer({"g": jnp.zeros((512,))})
+        true_sum = jnp.zeros((512,))
+        sent_sum = jnp.zeros((512,))
+        for i in range(20):
+            g = {"g": jax.random.normal(jax.random.fold_in(key, i), (512,))}
+            true_sum = true_sum + g["g"]
+            cg, err = ef_compress_tree(g, err)
+            sent_sum = sent_sum + cg["g"]
+        resid = float(jnp.max(jnp.abs(true_sum - sent_sum - err["g"])))
+        assert resid < 1e-3  # telescoping identity
+
+    def test_compressed_sgd_converges(self):
+        p = {"w": jax.random.normal(jax.random.PRNGKey(1), (8, 300)) * 0.3}
+        err = init_error_buffer(p)
+        for _ in range(300):
+            g = jax.grad(toy_loss)(p)
+            cg, err = ef_compress_tree(g, err)
+            p = jax.tree.map(lambda w, gg: w - 3e-3 * gg, p, cg)
+        assert float(toy_loss(p)) < 1e-2
+
+
+def test_global_norm():
+    t = {"a": jnp.ones((3,)), "b": jnp.ones((4,))}
+    assert float(global_norm(t)) == pytest.approx(np.sqrt(7.0), rel=1e-6)
+
+
+def test_schedule_shapes():
+    s = warmup_cosine(10, 100)
+    assert float(s(0)) == 0.0
+    assert float(s(10)) == pytest.approx(1.0, abs=0.01)
+    assert float(s(100)) == pytest.approx(0.1, abs=0.05)

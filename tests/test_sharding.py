@@ -1,0 +1,125 @@
+"""Sharding-spec derivation properties (repair, relocation, FSDP policy)."""
+from types import SimpleNamespace
+
+import jax
+import pytest
+from hypothesis import given, settings, strategies as st
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import all_archs, get_config
+from repro.models import build_model
+from repro.models import defs as D
+from repro.models.sharding import logical_to_spec, param_specs, repair_spec
+
+
+def fake_mesh(data=16, model=16, pod=None):
+    shape = {}
+    if pod:
+        shape["pod"] = pod
+    shape.update({"data": data, "model": model})
+    return SimpleNamespace(shape=shape, axis_names=tuple(shape))
+
+
+def nshards(mesh, entry):
+    if entry is None:
+        return 1
+    names = entry if isinstance(entry, tuple) else (entry,)
+    n = 1
+    for a in names:
+        n *= mesh.shape.get(a, 1)
+    return n
+
+
+class TestRepairSpec:
+    def test_drops_nondividing(self):
+        m = fake_mesh()
+        spec = repair_spec(P("model"), (40,), m)
+        assert spec[0] is None or 40 % nshards(m, spec[0]) == 0
+
+    def test_relocates_to_free_dim(self):
+        m = fake_mesh()
+        # vocab 49155 not divisible by 16 -> model moves to d (4096)
+        spec = repair_spec(P(None, "model", None), (1, 49155, 4096), m)
+        assert spec[1] is None
+        assert spec[2] == "model"
+
+    def test_no_relocate_for_head_dims(self):
+        m = fake_mesh()
+        spec = repair_spec(P(None, "model", None), (4096, 40, 128), m,
+                           axes_names=("embed", "heads", None))
+        assert tuple(spec) == (None, None, None)
+
+    @settings(max_examples=60, deadline=None)
+    @given(
+        dims=st.lists(st.integers(1, 4096), min_size=1, max_size=4),
+        data=st.sampled_from([2, 4, 16]),
+        model=st.sampled_from([2, 8, 16]),
+        which=st.integers(0, 3),
+    )
+    def test_result_always_valid(self, dims, data, model, which):
+        """Repaired spec always divides and never reuses a mesh axis."""
+        m = fake_mesh(data=data, model=model)
+        entries = [None] * len(dims)
+        entries[which % len(dims)] = "model"
+        if len(dims) > 1:
+            entries[(which + 1) % len(dims)] = "data"
+        spec = repair_spec(P(*entries), tuple(dims), m)
+        used = []
+        for e, dim in zip(tuple(spec) + (None,) * len(dims), dims):
+            assert dim % nshards(m, e) == 0
+            if e is not None:
+                names = e if isinstance(e, tuple) else (e,)
+                used += list(names)
+        assert len(used) == len(set(used))
+
+
+class TestParamSpecs:
+    @pytest.mark.parametrize("arch", all_archs())
+    def test_all_leaf_specs_valid(self, arch):
+        """Every param leaf of every arch gets a dividing spec on the
+        production mesh shape (this is what makes the dry-run lower)."""
+        mesh = fake_mesh(pod=2)
+        model = build_model(get_config(arch))
+        defs = model.param_defs()
+        specs = param_specs(defs, mesh, model.fsdp_axes())
+        flat_d = jax.tree.leaves(defs, is_leaf=D.is_def)
+        flat_s = jax.tree.leaves(
+            specs, is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec)
+        )
+        assert len(flat_d) == len(flat_s)
+        for d, s in zip(flat_d, flat_s):
+            entries = tuple(s) + (None,) * (len(d.shape) - len(tuple(s)))
+            for e, dim in zip(entries, d.shape):
+                assert dim % nshards(mesh, e) == 0, (arch, d.shape, s)
+
+    def test_fsdp_policy(self):
+        assert build_model(get_config("kimi-k2-1t-a32b")).fsdp_axes() == ("data", "pod")
+        assert build_model(get_config("granite-3-8b")).fsdp_axes() == ("data",)
+
+    def test_big_tensors_are_sharded_on_production_mesh(self):
+        """No >256MB fp32 leaf may end up fully replicated (HBM discipline)."""
+        mesh = fake_mesh()
+        import numpy as np
+
+        for arch in all_archs():
+            model = build_model(get_config(arch))
+            defs = model.param_defs()
+            specs = param_specs(defs, mesh, model.fsdp_axes())
+            for d, s in zip(
+                jax.tree.leaves(defs, is_leaf=D.is_def),
+                jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec)),
+            ):
+                size = int(np.prod(d.shape)) * 4
+                if size > 256 * 2**20:
+                    assert any(e is not None for e in tuple(s)), (arch, d.shape, s)
+
+
+class TestLogicalMapping:
+    def test_tp_dims(self):
+        ax = ("data", "model")
+        assert tuple(logical_to_spec(("vocab", "embed"), ax, ("data",))) == ("model", "data")
+        assert tuple(logical_to_spec(("layers", "embed", "ff"), ax, ())) == (None, None, "model")
+
+    def test_missing_axes_dropped(self):
+        spec = logical_to_spec(("batch", None), ("x", "y"), ())
+        assert tuple(spec) == (None, None)

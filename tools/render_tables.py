@@ -1,0 +1,86 @@
+"""Render EXPERIMENTS.md tables from results/dryrun/*.json."""
+import glob
+import json
+import os
+import sys
+
+sys.path.insert(0, "src")
+from repro.configs import SHAPES, get_config
+from repro.launch.dryrun import HBM_BW, LINK_BW, PEAK_FLOPS
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+ARCH_ORDER = ["musicgen-large", "minitron-8b", "qwen2.5-32b", "granite-3-8b",
+              "phi4-mini-3.8b", "kimi-k2-1t-a32b", "llama4-scout-17b-a16e",
+              "falcon-mamba-7b", "llama-3.2-vision-11b", "zamba2-1.2b"]
+
+
+def model_flops_per_device(arch, shape_name, chips):
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        return 6.0 * n * shape.global_batch * shape.seq_len / chips
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.global_batch * shape.seq_len / chips
+    return 2.0 * n * shape.global_batch / chips
+
+
+def load(d="results/dryrun_base"):
+    recs = {}
+    for fn in glob.glob(os.path.join(d, "*.json")):
+        r = json.load(open(fn))
+        recs[(r["arch"], r["shape"], r["mesh"])] = r
+    return recs
+
+
+def dryrun_table(recs, mesh="16x16"):
+    print(f"\n### Dry-run table ({mesh}; compile+lower wall, per-device HBM)\n")
+    print("| arch | shape | status | compile s | HBM/dev GB | collective GB/dev/step |")
+    print("|---|---|---|---|---|---|")
+    for a in ARCH_ORDER:
+        for s in SHAPE_ORDER:
+            r = recs.get((a, s, mesh))
+            if r is None:
+                print(f"| {a} | {s} | MISSING | | | |")
+            elif r.get("skipped"):
+                print(f"| {a} | {s} | skip (full-attn @500k) | — | — | — |")
+            else:
+                coll = r.get("collectives", {}).get("total_bytes", 0) / 1e9
+                print(f"| {a} | {s} | ok | {r['compile_s']} | {r['hbm_per_device_gb']} | {coll:.1f} |")
+
+
+def roofline_table(recs, mesh="16x16"):
+    print(f"\n### Roofline table ({mesh})\n")
+    print("| arch | shape | t_comp s | t_mem s | t_coll s | bound | 6ND/HLO | MFU-bound |")
+    print("|---|---|---|---|---|---|---|---|")
+    rows = []
+    for a in ARCH_ORDER:
+        for s in SHAPE_ORDER:
+            r = recs.get((a, s, mesh))
+            if not r or r.get("skipped") or "flops_per_device" not in r:
+                continue
+            tc = r["flops_per_device"] / PEAK_FLOPS
+            tm = r["bytes_per_device"] / HBM_BW
+            tl = r.get("collectives", {}).get("total_bytes", 0) / LINK_BW
+            step = max(tc, tm, tl)
+            bound = {tc: "compute", tm: "memory", tl: "collective"}[step]
+            mf = model_flops_per_device(a, s, r["chips"])
+            useful = mf / max(r["flops_per_device"], 1)
+            mfu = mf / PEAK_FLOPS / step
+            rows.append((a, s, tc, tm, tl, bound, useful, mfu))
+            print(f"| {a} | {s} | {tc:.3e} | {tm:.3e} | {tl:.3e} | {bound} "
+                  f"| {useful:.2f} | {mfu:.4f} |")
+    return rows
+
+
+if __name__ == "__main__":
+    recs = load()
+    mesh = sys.argv[1] if len(sys.argv) > 1 else "16x16"
+    dryrun_table(recs, mesh)
+    rows = roofline_table(recs, mesh)
+    print("\nworst MFU-bound cells:")
+    for a, s, tc, tm, tl, bound, useful, mfu in sorted(rows, key=lambda r: r[-1])[:6]:
+        print(f"  {a} x {s}: mfu_bound={mfu:.5f} bound={bound}")
+    print("most collective-bound cells:")
+    for a, s, tc, tm, tl, bound, useful, mfu in sorted(rows, key=lambda r: -(r[4]/max(max(r[2],r[3]),1e-12)))[:6]:
+        print(f"  {a} x {s}: t_coll/t_rest={tl/max(max(tc,tm),1e-12):.2f}")
