@@ -6,7 +6,25 @@ popsim_kernel   — DSim population evaluation (the paper's speed claim)
 
 Each kernel ships with a pure-jnp oracle in ref.py; ops.py holds the jit'd
 public wrappers (interpret=True on CPU, Mosaic on TPU).
+
+The runtime seam (kernels/runtime.py)
+-------------------------------------
+JAX renames/moves the APIs these kernels depend on across versions (TPU
+compiler-params class name, the shard-map entry point and its keyword
+names). ``runtime.py`` is the ONE module allowed to spell those names;
+everything else goes through its version-adaptive wrappers:
+
+  * ``runtime.dragon_pallas_call(...)`` instead of a direct pallas_call —
+    centralizes backend detection, interpret-mode auto-fallback on non-TPU
+    backends, block clamping helpers and compiler-params construction;
+  * ``runtime.spmd_map(...)`` instead of any direct shard-map spelling;
+  * ``runtime.vmem_scratch(...)`` instead of importing the TPU pallas module.
+
+New kernels MUST route through these wrappers — ``tools/check_kernel_seam.py``
+(run in CI) fails the build if a version-fragile spelling appears outside
+``kernels/runtime.py``.
 """
+from repro.kernels import runtime  # noqa: F401
 from repro.kernels.ops import (  # noqa: F401
     flash_attention,
     pack_chw,

@@ -27,7 +27,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import runtime
 
 NEG_INF = -1e30
 
@@ -93,15 +94,14 @@ def flash_attention(
     scale: float | None = None,
     block_q: int = 512,
     block_k: int = 512,
-    interpret: bool = False,
+    interpret: bool | None = None,
 ) -> jax.Array:
     B, Hq, Sq, D = q.shape
     _, Hkv, Skv, _ = k.shape
     assert Hq % Hkv == 0, (Hq, Hkv)
     group = Hq // Hkv
-    block_q = min(block_q, Sq)
-    block_k = min(block_k, Skv)
-    assert Sq % block_q == 0 and Skv % block_k == 0, (Sq, block_q, Skv, block_k)
+    block_q = runtime.clamp_block(block_q, Sq, name="block_q")
+    block_k = runtime.clamp_block(block_k, Skv, name="block_k")
     scale = scale if scale is not None else D ** -0.5
     q_steps, kv_steps = Sq // block_q, Skv // block_k
 
@@ -114,7 +114,7 @@ def flash_attention(
         kv_steps=kv_steps,
         off=Skv - Sq,
     )
-    return pl.pallas_call(
+    return runtime.dragon_pallas_call(
         kernel,
         grid=(B, Hq, q_steps, kv_steps),
         in_specs=[
@@ -125,12 +125,10 @@ def flash_attention(
         out_specs=pl.BlockSpec((1, 1, block_q, D), lambda b, h, i, j: (b, h, i, 0)),
         out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
         scratch_shapes=[
-            pltpu.VMEM((block_q, 1), jnp.float32),  # m: running row max
-            pltpu.VMEM((block_q, 1), jnp.float32),  # l: running row sum
-            pltpu.VMEM((block_q, D), jnp.float32),  # acc
+            runtime.vmem_scratch((block_q, 1), jnp.float32),  # m: running row max
+            runtime.vmem_scratch((block_q, 1), jnp.float32),  # l: running row sum
+            runtime.vmem_scratch((block_q, D), jnp.float32),  # acc
         ],
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel", "parallel", "parallel", "arbitrary"),
-        ),
+        dimension_semantics=("parallel", "parallel", "parallel", "arbitrary"),
     )(q, k, v)

@@ -1,7 +1,8 @@
 """Jit'd public wrappers around the Pallas kernels + packing helpers.
 
-``interpret`` defaults to auto: Pallas kernel bodies execute in Python on
-CPU (this container) and compile to Mosaic on real TPU.
+``interpret`` defaults to auto (resolved by kernels/runtime.py): Pallas
+kernel bodies execute in Python on CPU (this container) and compile to
+Mosaic on real TPU.
 """
 from __future__ import annotations
 
@@ -9,28 +10,22 @@ import functools
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core.dgen import ConcreteHW
 from repro.core.graph import Graph
 from repro.kernels import popsim_kernel as pk
+from repro.kernels import runtime
 from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.ssd import ssd_chunk_scan as _ssd
 
 
-def _auto_interpret() -> bool:
-    return jax.default_backend() != "tpu"
-
-
 @functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k", "interpret"))
 def flash_attention(q, k, v, *, causal=True, block_q=512, block_k=512, interpret=None):
-    interpret = _auto_interpret() if interpret is None else interpret
     return _flash(q, k, v, causal=causal, block_q=block_q, block_k=block_k, interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
 def ssd_chunk_scan(x, dt, A, B, C, *, chunk=256, interpret=None):
-    interpret = _auto_interpret() if interpret is None else interpret
     return _ssd(x, dt, A, B, C, chunk=chunk, interpret=interpret)
 
 
@@ -38,7 +33,6 @@ def ssd_chunk_scan(x, dt, A, B, C, *, chunk=256, interpret=None):
 def selective_scan(u, dt, A, B, C, D, *, chunk=64, block_c=512, interpret=None):
     from repro.kernels.sscan import selective_scan_pallas
 
-    interpret = _auto_interpret() if interpret is None else interpret
     return selective_scan_pallas(u, dt, A, B, C, D, chunk=chunk,
                                  block_c=block_c, interpret=interpret)
 
@@ -68,9 +62,9 @@ def pack_chw(chw: ConcreteHW) -> jax.Array:
         ]
         return jnp.concatenate(parts).astype(jnp.float32)
 
-    if jnp.ndim(chw.frequency) == 0:
-        return pack_one(chw)[None, :]
-    return jax.vmap(pack_one)(chw)
+    packed = pack_one(chw)[None, :] if jnp.ndim(chw.frequency) == 0 else jax.vmap(pack_one)(chw)
+    assert packed.shape[-1] == pk.CHW_COLS, (packed.shape, pk.CHW_COLS)
+    return packed
 
 
 def pack_graph(g: Graph) -> jax.Array:
@@ -83,12 +77,11 @@ def pack_graph(g: Graph) -> jax.Array:
     out = out.at[:, pk.G_ALLOC_GBUF].set(g.n_alloc[:, 1])
     out = out.at[:, pk.G_MAIN_PRESENT].set((g.n_alloc[:, 2] > 0).astype(jnp.float32))
     out = out.at[:, pk.G_DIMS].set(g.dims)
+    assert out.shape[-1] == pk.GRAPH_COLS, (out.shape, pk.GRAPH_COLS)
     return out
 
 
 @functools.partial(jax.jit, static_argnames=("block_pop", "interpret"))
 def popsim(graph_packed, chw_packed, *, block_pop=128, interpret=None):
-    interpret = _auto_interpret() if interpret is None else interpret
-    P = chw_packed.shape[0]
-    bp = int(np.gcd(block_pop, P))
+    bp = runtime.gcd_block(block_pop, chw_packed.shape[0])
     return pk.popsim(graph_packed, chw_packed, block_pop=bp, interpret=interpret)

@@ -10,10 +10,11 @@ bandwidth EMA).  Lanes = candidates, so all per-vertex arithmetic is
 (BP,)-vectorized on the VPU.
 
 Packed layouts (see ops.pack_chw / ops.pack_graph):
-  chw   [P, 24]: freq, cap_gbuf, bw[3], rlat[3], wlat[3], re_pb[3], we_pb[3],
-                 e_flop[4], rate[4] (FLOP/cycle), sys_x, sys_y  -> 24? see ops
+  chw   [P, 27]: freq, cap_gbuf, bw[3], rlat[3], wlat[3], re_pb[3], we_pb[3],
+                 e_flop[4], rate[4] (FLOP/cycle), sys_x, sys_y
+                 (= CHW_COLS = 27; column slices below are the ground truth)
   graph [V, 16]: n_comp[4], n_read[3], n_write[3], n_alloc_gbuf, main_alloc,
-                 dims[3], pad
+                 dims[3], pad  (= GRAPH_COLS = 16)
 Output [P, 8]: cycles, e_dyn, t_comp, t_mem, t_exposed, tiles, pad, pad.
 
 The pure-jnp oracle is ref.popsim_reference — identical math via lax.scan —
@@ -26,7 +27,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import runtime
 
 # chw packed column indices
 FREQ, CAP_GBUF = 0, 1
@@ -48,6 +50,10 @@ G_ALLOC_GBUF = 10
 G_MAIN_PRESENT = 11
 G_DIMS = slice(12, 15)
 GRAPH_COLS = 16
+
+# layout consistency: the column map must tile the declared widths exactly
+assert RATE.stop == SYS_X and SYS_Y == CHW_COLS - 1, "chw column map out of sync"
+assert G_DIMS.stop < GRAPH_COLS, "graph column map out of sync"
 
 OUT_COLS = 8
 _LOCAL, _GBUF, _MAIN = 0, 1, 2
@@ -141,16 +147,15 @@ def popsim(
     chw_packed: jax.Array,  # [P, CHW_COLS] fp32
     *,
     block_pop: int = 128,
-    interpret: bool = False,
+    interpret: bool | None = None,
 ) -> jax.Array:
     """Evaluate P candidate designs against one DFG.  Returns [P, OUT_COLS]."""
     V = graph_packed.shape[0]
     P = chw_packed.shape[0]
-    block_pop = min(block_pop, P)
-    assert P % block_pop == 0, (P, block_pop)
+    block_pop = runtime.clamp_block(block_pop, P, name="block_pop")
 
     kernel = functools.partial(_popsim_kernel, n_vertices=V)
-    return pl.pallas_call(
+    return runtime.dragon_pallas_call(
         kernel,
         grid=(P // block_pop,),
         in_specs=[
@@ -160,5 +165,5 @@ def popsim(
         out_specs=pl.BlockSpec((block_pop, OUT_COLS), lambda p: (p, 0)),
         out_shape=jax.ShapeDtypeStruct((P, OUT_COLS), jnp.float32),
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(dimension_semantics=("parallel",)),
+        dimension_semantics=("parallel",),
     )(graph_packed, chw_packed)

@@ -1,0 +1,233 @@
+"""Version-adaptive JAX/Pallas runtime layer — the ONE place that touches
+version-fragile JAX API spellings.
+
+JAX has renamed or moved every API the DSim kernels depend on at least once:
+
+  * ``pltpu.TPUCompilerParams`` (<= 0.4.x)  ->  ``pltpu.CompilerParams``
+  * ``jax.experimental.shard_map.shard_map`` ->  ``jax.shard_map``
+  * ``shard_map(..., check_rep=)``           ->  ``shard_map(..., check_vma=)``
+
+Every kernel and every explicit-SPMD call site routes through this module so
+the rest of the codebase never spells a version-specific name:
+
+  * :func:`tpu_compiler_params` — construct TPU compiler params under either
+    class name (returns ``None`` when no TPU Pallas backend is available).
+  * :func:`resolve_shard_map` — return the shard-map entry point under either
+    spelling (``None`` if the installed JAX has neither).
+  * :func:`spmd_map` — the call-site wrapper around :func:`resolve_shard_map`
+    that also adapts the replication-check keyword across versions.
+  * :func:`dragon_pallas_call` — the single ``pl.pallas_call`` wrapper:
+    backend detection, interpret-mode auto-fallback on non-TPU backends,
+    compiler-params construction, and scratch plumbing.
+  * :func:`clamp_block` / :func:`gcd_block` — centralized block-size clamping.
+  * :func:`vmem_scratch` — VMEM scratch allocation without importing pltpu.
+
+Resolution is performed at call time (never cached) so tests can monkeypatch
+either spelling in and out, and so a process that upgrades its backend
+mid-life (e.g. ``jax.config`` platform switches) stays correct.
+"""
+from __future__ import annotations
+
+import inspect
+import math
+import warnings
+from typing import Any, Callable, Sequence
+
+import jax
+from jax.experimental import pallas as pl
+
+try:  # pltpu imports cleanly on CPU-only installs; gate it anyway.
+    from jax.experimental.pallas import tpu as pltpu
+except ImportError:  # pragma: no cover - exercised via monkeypatch in tests
+    pltpu = None
+
+
+# --------------------------------------------------------------------------- #
+# backend detection
+# --------------------------------------------------------------------------- #
+
+
+def auto_interpret() -> bool:
+    """True when Pallas kernels must run in interpret mode (non-TPU backend).
+
+    Pallas TPU kernels compile through Mosaic only on a real TPU backend; on
+    CPU/GPU the kernel bodies execute in the Pallas interpreter instead.
+    """
+    return jax.default_backend() != "tpu"
+
+
+def resolve_interpret(interpret: bool | None) -> bool:
+    """Resolve the tri-state ``interpret`` convention: None means auto."""
+    return auto_interpret() if interpret is None else bool(interpret)
+
+
+# --------------------------------------------------------------------------- #
+# compiler params (TPUCompilerParams <-> CompilerParams)
+# --------------------------------------------------------------------------- #
+
+
+def _compiler_params_cls():
+    if pltpu is None:
+        return None
+    for name in ("CompilerParams", "TPUCompilerParams"):
+        cls = getattr(pltpu, name, None)
+        if cls is not None:
+            return cls
+    return None
+
+
+def tpu_compiler_params(**kw) -> Any | None:
+    """Build TPU compiler params under whichever class the installed JAX has.
+
+    Returns ``None`` (caller omits the argument) when neither spelling exists,
+    so kernels degrade gracefully on installs without a TPU Pallas backend.
+    Keywords the resolved class does not accept are dropped with the same
+    graceful intent — e.g. ``serial_iteration_hints`` on old versions.
+    """
+    cls = _compiler_params_cls()
+    if cls is None:
+        return None
+    try:
+        accepted = inspect.signature(cls).parameters
+    except (TypeError, ValueError):  # pragma: no cover - exotic builds
+        return cls(**kw)
+    if any(p.kind is inspect.Parameter.VAR_KEYWORD for p in accepted.values()):
+        return cls(**kw)
+    return cls(**{k: v for k, v in kw.items() if k in accepted})
+
+
+# --------------------------------------------------------------------------- #
+# shard-map resolution
+# --------------------------------------------------------------------------- #
+
+
+def resolve_shard_map() -> Callable | None:
+    """Return the shard-map entry point under either spelling.
+
+    Prefers the stable ``jax.shard_map`` (>= 0.5); falls back to
+    ``jax.experimental.shard_map.shard_map`` (0.4.x). ``None`` if neither
+    exists.
+    """
+    fn = getattr(jax, "shard_map", None)
+    if fn is not None:
+        return fn
+    try:
+        from jax.experimental.shard_map import shard_map as legacy_fn
+    except ImportError:
+        return None
+    return legacy_fn
+
+
+def spmd_map(fn: Callable, *, mesh, in_specs, out_specs, check: bool = True) -> Callable:
+    """Version-adaptive shard-map wrapper — the only sanctioned call site API.
+
+    ``check`` maps onto whichever replication-check keyword the resolved
+    entry point accepts (``check_vma`` on new JAX, ``check_rep`` on 0.4.x).
+    """
+    sm = resolve_shard_map()
+    if sm is None:
+        raise RuntimeError(
+            "No shard-map implementation found in the installed JAX; "
+            "need jax.shard_map or jax.experimental.shard_map.shard_map."
+        )
+    kw: dict[str, Any] = {}
+    try:
+        params = inspect.signature(sm).parameters
+    except (TypeError, ValueError):  # pragma: no cover - builtins etc.
+        params = {}
+    for name in ("check_vma", "check_rep"):
+        if name in params:
+            kw[name] = check
+            break
+    else:
+        if not check:
+            # A third keyword rename (or an uninspectable wrapper) must be
+            # visible, not silent: without the kwarg, shard-map runs with its
+            # default check ENABLED at call sites that asked to disable it.
+            warnings.warn(
+                "spmd_map: resolved shard-map accepts neither check_vma nor "
+                "check_rep; check=False could not be forwarded — update "
+                "repro.kernels.runtime for this JAX version.",
+                RuntimeWarning,
+                stacklevel=2,
+            )
+    return sm(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)
+
+
+# --------------------------------------------------------------------------- #
+# block-size clamping
+# --------------------------------------------------------------------------- #
+
+
+def clamp_block(block: int, size: int, *, name: str = "block") -> int:
+    """Clamp a block size to the dimension extent; the result must tile it."""
+    b = min(int(block), int(size))
+    if b <= 0 or size % b != 0:
+        raise ValueError(f"{name}={block} cannot tile extent {size} (clamped to {b})")
+    return b
+
+
+def gcd_block(block: int, size: int) -> int:
+    """Largest divisor of ``size`` that is <= gcd(block, size) — always tiles."""
+    return max(int(math.gcd(int(block), int(size))), 1)
+
+
+# --------------------------------------------------------------------------- #
+# scratch + the pallas_call seam
+# --------------------------------------------------------------------------- #
+
+
+def vmem_scratch(shape: Sequence[int], dtype) -> Any:
+    """A VMEM scratch allocation, without the caller importing pltpu.
+
+    Unlike compiler params (which degrade to "omit the argument"), scratch
+    has no pltpu-free spelling — even interpret mode rejects a plain
+    ShapeDtypeStruct — so an install without the TPU Pallas module gets a
+    hard, descriptive error rather than silent misbehavior.
+    """
+    if pltpu is None:
+        raise RuntimeError(
+            "jax.experimental.pallas.tpu is unavailable in this install; "
+            "scratch-using kernels need it even in interpret mode (there is "
+            "no portable scratch spelling)."
+        )
+    return pltpu.VMEM(tuple(shape), dtype)
+
+
+def dragon_pallas_call(
+    kernel: Callable,
+    *,
+    grid,
+    in_specs,
+    out_specs,
+    out_shape,
+    scratch_shapes: Sequence[Any] | None = None,
+    dimension_semantics: Sequence[str] | None = None,
+    interpret: bool | None = None,
+    **compiler_kw,
+) -> Callable:
+    """The single ``pl.pallas_call`` wrapper all DSim kernels go through.
+
+    * ``interpret=None`` auto-falls back to interpret mode off-TPU
+      (:func:`auto_interpret`), matching the kernels' CPU test path.
+    * ``dimension_semantics`` (plus any extra ``compiler_kw``) is turned into
+      compiler params via :func:`tpu_compiler_params`; when the installed JAX
+      exposes no compiler-params class the argument is omitted entirely.
+    """
+    interpret = resolve_interpret(interpret)
+    kwargs: dict[str, Any] = dict(
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=interpret,
+    )
+    if scratch_shapes:
+        kwargs["scratch_shapes"] = list(scratch_shapes)
+    if dimension_semantics is not None:
+        compiler_kw = dict(compiler_kw, dimension_semantics=tuple(dimension_semantics))
+    if compiler_kw:
+        params = tpu_compiler_params(**compiler_kw)
+        if params is not None:
+            kwargs["compiler_params"] = params
+    return pl.pallas_call(kernel, **kwargs)

@@ -21,7 +21,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import runtime
 
 
 def _scan_kernel(u_ref, dt_ref, a_ref, b_ref, c_ref, d_ref, y_ref, state_ref,
@@ -68,17 +69,16 @@ def selective_scan_pallas(
     *,
     chunk: int = 64,
     block_c: int = 512,
-    interpret: bool = False,
+    interpret: bool | None = None,
 ) -> jax.Array:
     B, S, C = u.shape
     N = A.shape[1]
-    chunk = min(chunk, S)
-    block_c = min(block_c, C)
-    assert S % chunk == 0 and C % block_c == 0, (S, chunk, C, block_c)
+    chunk = runtime.clamp_block(chunk, S, name="chunk")
+    block_c = runtime.clamp_block(block_c, C, name="block_c")
     n_chunks = S // chunk
 
     kernel = functools.partial(_scan_kernel, chunk=chunk, n_chunks=n_chunks)
-    return pl.pallas_call(
+    return runtime.dragon_pallas_call(
         kernel,
         grid=(B, C // block_c, n_chunks),
         in_specs=[
@@ -91,9 +91,7 @@ def selective_scan_pallas(
         ],
         out_specs=pl.BlockSpec((1, chunk, block_c), lambda b, c, s: (b, s, c)),
         out_shape=jax.ShapeDtypeStruct((B, S, C), u.dtype),
-        scratch_shapes=[pltpu.VMEM((block_c, N), jnp.float32)],
+        scratch_shapes=[runtime.vmem_scratch((block_c, N), jnp.float32)],
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary"),
-        ),
+        dimension_semantics=("parallel", "parallel", "arbitrary"),
     )(u, dt, A, Bm, Cm, D.reshape(1, C))

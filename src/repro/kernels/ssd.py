@@ -29,7 +29,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import runtime
 
 
 def _ssd_kernel(
@@ -97,17 +98,16 @@ def ssd_chunk_scan(
     C: jax.Array,  # [Batch, S, N]
     *,
     chunk: int = 256,
-    interpret: bool = False,
+    interpret: bool | None = None,
 ) -> tuple[jax.Array, jax.Array]:
     """Returns (y [Batch,S,H,P], final_state [Batch,H,N,P])."""
     Bt, S, H, P = x.shape
     N = B.shape[-1]
-    chunk = min(chunk, S)
-    assert S % chunk == 0, (S, chunk)
+    chunk = runtime.clamp_block(chunk, S, name="chunk")
     n_chunks = S // chunk
 
     kernel = functools.partial(_ssd_kernel, n_chunks=n_chunks)
-    y, state = pl.pallas_call(
+    y, state = runtime.dragon_pallas_call(
         kernel,
         grid=(Bt, H, n_chunks),
         in_specs=[
@@ -125,10 +125,8 @@ def ssd_chunk_scan(
             jax.ShapeDtypeStruct((Bt, S, H, P), x.dtype),
             jax.ShapeDtypeStruct((Bt, H, N, P), jnp.float32),
         ],
-        scratch_shapes=[pltpu.VMEM((N, P), jnp.float32)],
+        scratch_shapes=[runtime.vmem_scratch((N, P), jnp.float32)],
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary"),
-        ),
+        dimension_semantics=("parallel", "parallel", "arbitrary"),
     )(x, dt, A.reshape(1, H), B, C)
     return y, state

@@ -26,6 +26,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels import runtime
 from repro.models.sharding import constrain
 
 
@@ -142,11 +143,12 @@ def moe_ffn_shardmap(
     fsdp_axes: tuple = (),
     compute_dtype=jnp.bfloat16,
 ) -> MoEOut:
-    """Expert-parallel MoE via shard_map — the at-scale path.
+    """Expert-parallel MoE via an explicit SPMD map — the at-scale path.
 
     GSPMD cannot partition the dispatch scatter (it replicates the [E,C,d]
-    buffer and all-reduces it: ~170 TB/step for kimi-k2). Under shard_map
-    every collective is explicit and minimal:
+    buffer and all-reduces it: ~170 TB/step for kimi-k2). Under the
+    SPMD-mapped body (runtime.spmd_map) every collective is explicit and
+    minimal:
 
       * tokens stay on their (pod, data) shard for the whole block — routing,
         dispatch and combine are LOCAL (GShard per-shard capacity semantics);
@@ -157,7 +159,7 @@ def moe_ffn_shardmap(
       * each model shard computes only its E/ep experts for all local
         tokens; the combine is one psum over "model".
 
-    Autodiff through shard_map transposes the gathers into reduce-scatters,
+    Autodiff through the SPMD map transposes the gathers into reduce-scatters,
     giving the ZeRO-3 gradient schedule for free.
     """
     assert mesh is not None and "model" in mesh.axis_names
@@ -252,7 +254,7 @@ def moe_ffn_shardmap(
 
     P = jax.sharding.PartitionSpec
     d_spec = fsdp[0] if len(fsdp) == 1 else (tuple(fsdp) if fsdp else None)
-    out = jax.shard_map(
+    out = runtime.spmd_map(
         body,
         mesh=mesh,
         in_specs=(
@@ -263,7 +265,7 @@ def moe_ffn_shardmap(
             P("model", None, d_spec),   # w_down [E, f, d]
         ),
         out_specs=(P(data_axes, None), P(), P(), P()),
-        check_vma=False,
+        check=False,
     )(x, router_w, w_gate, w_up, w_down)
     y, aux, z, dfrac = out
     return MoEOut(y=y.astype(x.dtype), aux_loss=aux, z_loss=z, dropped_frac=dfrac)

@@ -1,8 +1,9 @@
 """Error-feedback int8 gradient compression for the DP all-reduce.
 
 Under plain pjit the DP gradient psum is inserted by the GSPMD partitioner
-and cannot be intercepted, so the compressed path is an *explicit* shard_map
-reduction: per-DP-shard gradients are int8-quantized (block scales), summed
+and cannot be intercepted, so the compressed path is an *explicit* SPMD-mapped
+reduction (run the body under kernels/runtime.spmd_map): per-DP-shard
+gradients are int8-quantized (block scales), summed
 with jax.lax.psum on the quantized-then-dequantized values, and the
 quantization residual is carried in an error-feedback buffer that is added
 to the next step's gradients — the classic EF-SGD construction, which keeps
@@ -46,7 +47,7 @@ def init_error_buffer(params):
 
 
 def compressed_psum(grads, axis_name: str, err_tree):
-    """shard_map body helper: EF-compress local grads, psum, return mean."""
+    """SPMD-map body helper: EF-compress local grads, psum, return mean."""
     cg, err = ef_compress_tree(grads, err_tree)
     summed = jax.tree.map(lambda x: jax.lax.pmean(x, axis_name), cg)
     return summed, err

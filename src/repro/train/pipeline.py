@@ -1,4 +1,4 @@
-"""GPipe-style pipeline parallelism via shard_map + collective_permute.
+"""GPipe-style pipeline parallelism via an explicit SPMD map + collective_permute.
 
 Why it exists here: §Perf hillclimb 2 concluded that 1T-class MoE training
 is ZeRO-3 *weight-gather bound* — every step re-gathers 2 TB of expert
@@ -10,11 +10,12 @@ Design (the standard JAX "pipeline as a collective matmul" construction):
 
   * the mesh gains a "stage" axis; layer stacks [L, ...] are sharded over it
     (L/S layers resident per stage — no weight motion, ever);
-  * inside shard_map, each device runs the GPipe schedule over M microbatches
-    as a fori-loop of (S + M - 1) ticks: compute the resident layers on the
-    current microbatch, then ppermute the activations to the next stage;
+  * inside the SPMD-mapped body (runtime.spmd_map), each device runs the GPipe
+    schedule over M microbatches as a fori-loop of (S + M - 1) ticks: compute
+    the resident layers on the current microbatch, then ppermute the
+    activations to the next stage;
   * bubbles: first (S-1) ticks of the pipe are fill; efficiency M/(M+S-1);
-  * the backward pass is jax.grad THROUGH the shard_map (ppermute transposes
+  * the backward pass is jax.grad THROUGH the SPMD map (ppermute transposes
     to the reverse permutation automatically), giving the 1F1B-equivalent
     traffic without hand-writing the backward schedule.
 
@@ -33,6 +34,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.kernels import runtime
+
 
 def gpipe(
     layer_fn: Callable,  # (layer_params, x) -> x
@@ -42,7 +45,7 @@ def gpipe(
 ):
     """Build a pipelined apply: (stacked_params [L,...], x [M*mb, ...]) -> y.
 
-    Returned fn must run INSIDE shard_map with ``stacked_params`` sharded
+    Returned fn must run INSIDE runtime.spmd_map with ``stacked_params`` sharded
     P(stage_axis, ...) on the layer dim and ``x`` replicated per stage
     (microbatches enter at stage 0).
     """
@@ -108,7 +111,7 @@ def pipeline_apply(
     n_microbatches: int,
     stage_axis: str = "stage",
 ):
-    """shard_map wrapper: shards layers over the stage axis, microbatches the
+    """SPMD-map wrapper: shards layers over the stage axis, microbatches the
     batch dim, runs the GPipe schedule, returns [B, ...]."""
     n_stages = mesh.shape[stage_axis]
     B = x.shape[0]
@@ -118,12 +121,12 @@ def pipeline_apply(
 
     apply = gpipe(layer_fn, n_stages, n_microbatches, stage_axis)
 
-    fn = jax.shard_map(
+    fn = runtime.spmd_map(
         apply,
         mesh=mesh,
         in_specs=(P(stage_axis), P()),  # layers sharded; microbatches replicated
         out_specs=P(),
-        check_vma=False,
+        check=False,
     )
     y = fn(stacked_params, xm)
     return y.reshape((B,) + x.shape[1:])

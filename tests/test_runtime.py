@@ -1,0 +1,219 @@
+"""Version-adaptive runtime layer: API-spelling resolution under monkeypatch
+(TPUCompilerParams/CompilerParams present or absent, jax.shard_map present or
+absent), interpret-mode auto-fallback, keyword adaptation, block clamping."""
+import functools
+from types import SimpleNamespace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import runtime
+
+
+class NewStyleParams:
+    def __init__(self, dimension_semantics=None):
+        self.dimension_semantics = dimension_semantics
+
+
+class OldStyleParams:
+    def __init__(self, dimension_semantics=None):
+        self.dimension_semantics = dimension_semantics
+
+
+class TestCompilerParams:
+    def test_prefers_new_spelling(self, monkeypatch):
+        fake = SimpleNamespace(CompilerParams=NewStyleParams, TPUCompilerParams=OldStyleParams)
+        monkeypatch.setattr(runtime, "pltpu", fake)
+        p = runtime.tpu_compiler_params(dimension_semantics=("parallel",))
+        assert isinstance(p, NewStyleParams)
+        assert p.dimension_semantics == ("parallel",)
+
+    def test_falls_back_to_old_spelling(self, monkeypatch):
+        fake = SimpleNamespace(TPUCompilerParams=OldStyleParams)
+        monkeypatch.setattr(runtime, "pltpu", fake)
+        p = runtime.tpu_compiler_params(dimension_semantics=("arbitrary",))
+        assert isinstance(p, OldStyleParams)
+
+    def test_neither_spelling_returns_none(self, monkeypatch):
+        monkeypatch.setattr(runtime, "pltpu", SimpleNamespace())
+        assert runtime.tpu_compiler_params(dimension_semantics=("parallel",)) is None
+
+    def test_no_tpu_module_returns_none(self, monkeypatch):
+        monkeypatch.setattr(runtime, "pltpu", None)
+        assert runtime.tpu_compiler_params(dimension_semantics=("parallel",)) is None
+
+    def test_unknown_kwargs_dropped(self, monkeypatch):
+        fake = SimpleNamespace(CompilerParams=NewStyleParams)
+        monkeypatch.setattr(runtime, "pltpu", fake)
+        p = runtime.tpu_compiler_params(
+            dimension_semantics=("parallel",), serial_iteration_hints=123
+        )
+        assert isinstance(p, NewStyleParams)
+
+    def test_real_install_resolves(self):
+        # whatever JAX is installed, one of the two spellings must resolve
+        p = runtime.tpu_compiler_params(dimension_semantics=("parallel",))
+        assert p is not None
+
+
+class TestShardMapResolution:
+    def test_prefers_stable_spelling(self, monkeypatch):
+        sentinel = lambda *a, **k: "stable"  # noqa: E731
+        monkeypatch.setattr(jax, "shard_map", sentinel, raising=False)
+        assert runtime.resolve_shard_map() is sentinel
+
+    def test_falls_back_to_experimental(self, monkeypatch):
+        # ensure the stable spelling is truly absent, then expect the
+        # experimental module's entry point
+        monkeypatch.delattr(jax, "shard_map", raising=False)
+        fn = runtime.resolve_shard_map()
+        from jax.experimental.shard_map import shard_map as legacy
+
+        assert fn is legacy
+
+    def test_spmd_map_adapts_check_rep_keyword(self, monkeypatch):
+        seen = {}
+
+        def fake_sm(f, *, mesh, in_specs, out_specs, check_rep=True):
+            seen.update(mesh=mesh, check_rep=check_rep)
+            return f
+
+        monkeypatch.setattr(jax, "shard_map", fake_sm, raising=False)
+        body = lambda x: x  # noqa: E731
+        out = runtime.spmd_map(body, mesh="M", in_specs=(), out_specs=(), check=False)
+        assert out is body
+        assert seen == {"mesh": "M", "check_rep": False}
+
+    def test_spmd_map_adapts_check_vma_keyword(self, monkeypatch):
+        seen = {}
+
+        def fake_sm(f, *, mesh, in_specs, out_specs, check_vma=True):
+            seen.update(check_vma=check_vma)
+            return f
+
+        monkeypatch.setattr(jax, "shard_map", fake_sm, raising=False)
+        runtime.spmd_map(lambda x: x, mesh="M", in_specs=(), out_specs=(), check=True)
+        assert seen == {"check_vma": True}
+
+    def test_spmd_map_warns_when_check_kw_unadaptable(self, monkeypatch):
+        def fake_sm(f, *, mesh, in_specs, out_specs):  # a third rename: no check kw
+            return f
+
+        monkeypatch.setattr(jax, "shard_map", fake_sm, raising=False)
+        with pytest.warns(RuntimeWarning, match="check=False could not be forwarded"):
+            runtime.spmd_map(lambda x: x, mesh="M", in_specs=(), out_specs=(), check=False)
+
+    def test_missing_everywhere_raises(self, monkeypatch):
+        monkeypatch.delattr(jax, "shard_map", raising=False)
+        import jax.experimental.shard_map as sm_mod
+
+        monkeypatch.delattr(sm_mod, "shard_map", raising=False)
+        assert runtime.resolve_shard_map() is None
+        with pytest.raises(RuntimeError, match="shard-map"):
+            runtime.spmd_map(lambda x: x, mesh=None, in_specs=(), out_specs=())
+
+
+class TestDispatch:
+    def test_auto_interpret_tracks_backend(self, monkeypatch):
+        monkeypatch.setattr(jax, "default_backend", lambda: "cpu")
+        assert runtime.auto_interpret() is True
+        monkeypatch.setattr(jax, "default_backend", lambda: "tpu")
+        assert runtime.auto_interpret() is False
+
+    @pytest.mark.parametrize("backend,expect_interpret", [("cpu", True), ("tpu", False)])
+    def test_dragon_pallas_call_mode_selection(self, monkeypatch, backend, expect_interpret):
+        captured = {}
+
+        def fake_pallas_call(kernel, **kwargs):
+            captured.update(kwargs)
+            return lambda *operands: None
+
+        monkeypatch.setattr(jax, "default_backend", lambda: backend)
+        monkeypatch.setattr(runtime.pl, "pallas_call", fake_pallas_call)
+        runtime.dragon_pallas_call(
+            lambda x_ref, o_ref: None,
+            grid=(1,),
+            in_specs=[],
+            out_specs=None,
+            out_shape=jax.ShapeDtypeStruct((4,), jnp.float32),
+            dimension_semantics=("parallel",),
+        )()
+        assert captured["interpret"] is expect_interpret
+        assert captured["compiler_params"] is not None
+        assert captured["compiler_params"].dimension_semantics == ("parallel",)
+
+    def test_dragon_pallas_call_omits_params_when_unresolvable(self, monkeypatch):
+        captured = {}
+
+        def fake_pallas_call(kernel, **kwargs):
+            captured.update(kwargs)
+            return lambda *operands: None
+
+        monkeypatch.setattr(runtime.pl, "pallas_call", fake_pallas_call)
+        monkeypatch.setattr(runtime, "pltpu", None)
+        runtime.dragon_pallas_call(
+            lambda x_ref, o_ref: None,
+            grid=(1,),
+            in_specs=[],
+            out_specs=None,
+            out_shape=jax.ShapeDtypeStruct((4,), jnp.float32),
+            dimension_semantics=("parallel",),
+            interpret=True,
+        )()
+        assert "compiler_params" not in captured
+
+    def test_vmem_scratch_without_tpu_module_raises_descriptively(self, monkeypatch):
+        monkeypatch.setattr(runtime, "pltpu", None)
+        with pytest.raises(RuntimeError, match="no portable scratch spelling"):
+            runtime.vmem_scratch((4, 4), jnp.float32)
+
+    def test_end_to_end_interpret_kernel(self):
+        """A real (tiny) kernel through the seam in interpret mode."""
+        from jax.experimental import pallas as pl
+
+        def double(x_ref, o_ref):
+            o_ref[...] = x_ref[...] * 2.0
+
+        x = jnp.arange(8, dtype=jnp.float32).reshape(2, 4)
+        y = runtime.dragon_pallas_call(
+            double,
+            grid=(2,),
+            in_specs=[pl.BlockSpec((1, 4), lambda i: (i, 0))],
+            out_specs=pl.BlockSpec((1, 4), lambda i: (i, 0)),
+            out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+            dimension_semantics=("parallel",),
+            interpret=None,  # auto: CPU backend -> interpret
+        )(x)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(x) * 2.0)
+
+    def test_spmd_map_end_to_end(self):
+        """Real shard-map through the seam on the 1-device CPU mesh."""
+        from jax.sharding import PartitionSpec as P
+
+        mesh = jax.make_mesh((1,), ("data",))
+        fn = runtime.spmd_map(
+            functools.partial(jax.lax.psum, axis_name="data"),
+            mesh=mesh,
+            in_specs=P("data"),
+            out_specs=P(),
+            check=False,
+        )
+        x = jnp.ones((4,), jnp.float32)
+        np.testing.assert_allclose(np.asarray(fn(x)), np.ones(4))
+
+
+class TestBlockClamping:
+    def test_clamp_block(self):
+        assert runtime.clamp_block(512, 128) == 128
+        assert runtime.clamp_block(64, 128) == 64
+
+    def test_clamp_block_rejects_non_tiling(self):
+        with pytest.raises(ValueError, match="block_q"):
+            runtime.clamp_block(128, 300, name="block_q")
+
+    def test_gcd_block_always_tiles(self):
+        for block, size in [(128, 300), (128, 128), (7, 13), (1000, 4)]:
+            b = runtime.gcd_block(block, size)
+            assert b >= 1 and size % b == 0

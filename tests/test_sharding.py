@@ -3,7 +3,7 @@ from types import SimpleNamespace
 
 import jax
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st  # degrades to skip without hypothesis
 from jax.sharding import PartitionSpec as P
 
 from repro.configs import all_archs, get_config

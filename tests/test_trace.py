@@ -6,7 +6,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st  # degrades to skip without hypothesis
 
 from repro.configs import SHAPES, all_archs, get_config
 from repro.configs.base import ShapeConfig

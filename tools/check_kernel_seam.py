@@ -1,0 +1,50 @@
+#!/usr/bin/env python
+"""Lint: version-fragile JAX spellings must stay inside kernels/runtime.py.
+
+The runtime seam (src/repro/kernels/runtime.py) is the only module allowed
+to reference TPU compiler-params classes or the shard-map entry points by
+name — everything else must go through runtime.dragon_pallas_call /
+runtime.spmd_map / runtime.tpu_compiler_params. This script fails (exit 1)
+when a version-fragile spelling appears anywhere else under src/, so a new
+kernel cannot silently reintroduce a fragile call site:
+
+  * ``CompilerParams`` / ``shard_map`` — the renamed APIs themselves;
+  * ``pltpu`` / ``pallas import tpu`` — kernels must use
+    ``runtime.vmem_scratch`` instead of importing the TPU pallas module;
+  * ``pl.pallas_call`` — kernels must use ``runtime.dragon_pallas_call``
+    (interpret auto-fallback + compiler-params construction).
+
+Usage: python tools/check_kernel_seam.py [src_dir]
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+PATTERN = re.compile(
+    r"CompilerParams|shard_map|\bpltpu\b|pallas\s+import\s+tpu|pl\.pallas_call"
+)
+ALLOWED = ("kernels/runtime.py",)
+
+
+def check(src_dir: Path) -> int:
+    violations = []
+    for path in sorted(src_dir.rglob("*.py")):
+        rel = path.as_posix()
+        if rel.endswith(ALLOWED):
+            continue
+        for lineno, line in enumerate(path.read_text().splitlines(), 1):
+            if PATTERN.search(line):
+                violations.append(f"{rel}:{lineno}: {line.strip()}")
+    if violations:
+        print("kernel-seam violations (route through repro.kernels.runtime):")
+        print("\n".join(violations))
+        return 1
+    print(f"kernel seam clean: no version-fragile spellings outside {ALLOWED[0]}")
+    return 0
+
+
+if __name__ == "__main__":
+    root = Path(sys.argv[1]) if len(sys.argv) > 1 else Path(__file__).resolve().parent.parent / "src"
+    sys.exit(check(root))
