@@ -6,8 +6,14 @@ DOpt  : dopt.py (+ popsim.py distributed DSE)
 """
 from repro.core.dgen import ConcreteHW, specialize  # noqa: F401
 from repro.core.dopt import OptResult, derive_tech_targets, optimize  # noqa: F401
-from repro.core.dsim import PerfEstimate, simulate, simulate_chw  # noqa: F401
+from repro.core.dsim import (  # noqa: F401
+    PerfEstimate,
+    simulate,
+    simulate_chw,
+    simulate_stacked,
+    stacked_log_objective,
+)
 from repro.core.graph import Graph, GraphBuilder, workload_optimize  # noqa: F401
-from repro.core.mapper import MapperCfg, MapState, map_workload  # noqa: F401
+from repro.core.mapper import MapperCfg, MapState, map_workload, map_workload_scan  # noqa: F401
 from repro.core.params import ArchParams, ArchSpec, TechParams  # noqa: F401
 from repro.core.trace import model_flops, trace_lm  # noqa: F401

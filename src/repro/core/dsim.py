@@ -88,6 +88,41 @@ def simulate_jit(tech, arch, g, spec: ArchSpec = ArchSpec(), mcfg: MapperCfg = M
     return simulate(tech, arch, g, spec, mcfg)
 
 
+def simulate_stacked(
+    tech: TechParams,
+    arch: ArchParams,
+    gs: Graph,
+    spec: ArchSpec = ArchSpec(),
+    mcfg: MapperCfg = MapperCfg(),
+    type_weights: jax.Array | None = None,
+) -> PerfEstimate:
+    """Batched simulate over a ``Graph.stack()``-ed workload axis.
+
+    One hardware point, W workloads, one vmapped mapper dispatch — the
+    multi-workload path shared by DOpt's loss and popsim's population DSE
+    (compile time and runtime no longer scale with Python-level unrolling).
+    Returns a PerfEstimate whose fields carry a leading [W] axis.
+    """
+    return jax.vmap(lambda g: simulate(tech, arch, g, spec, mcfg, type_weights))(gs)
+
+
+def stacked_log_objective(
+    tech: TechParams,
+    arch: ArchParams,
+    gs: Graph,
+    objective: str = "edp",
+    area_constraint: float | None = None,
+    spec: ArchSpec = ArchSpec(),
+    mcfg: MapperCfg = MapperCfg(),
+    type_weights: jax.Array | None = None,
+) -> tuple[jax.Array, PerfEstimate]:
+    """Mean log objective across a stacked workload set (+ the batched
+    estimates).  Log-objective keeps gradients scale-free across
+    heterogeneous workloads."""
+    perfs = simulate_stacked(tech, arch, gs, spec, mcfg, type_weights)
+    return jnp.mean(jnp.log(objective_value(perfs, objective, area_constraint))), perfs
+
+
 def objective_value(perf: PerfEstimate, objective: str, area_constraint: float | None = None) -> jax.Array:
     """Scalar optimization objective (paper §7 / Appendix C).
 

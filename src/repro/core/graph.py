@@ -84,6 +84,34 @@ class Graph:
             names=self.names + ("pad",) * p,
         )
 
+    @staticmethod
+    def stack(graphs: "list[Graph]") -> "Graph":
+        """Stack workloads into one Graph with a leading workload axis W.
+
+        Every data array becomes [W, V_max, ...] (vertex lists padded with
+        no-op vertices via :meth:`pad_to`; the mapper prices no-op vertices
+        at zero cycles and excludes them from the tile/memory-time
+        diagnostics, so padding is exact for the whole MapState).  This is the batched-workload
+        convention shared by DOpt's multi-workload loss and popsim's
+        population DSE: simulate is vmapped over the leading axis.  Edges are
+        ragged across workloads and unused by the mapper, so the stacked
+        graph carries an empty edge list.
+        """
+        assert graphs, "Graph.stack needs at least one graph"
+        vmax = max(g.n_vertices for g in graphs)
+        gs = [g.pad_to(vmax) for g in graphs]
+        stk = lambda f: jnp.stack([getattr(g, f) for g in gs])
+        return Graph(
+            n_comp=stk("n_comp"),
+            n_read=stk("n_read"),
+            n_write=stk("n_write"),
+            n_alloc=stk("n_alloc"),
+            dims=stk("dims"),
+            op_kind=stk("op_kind"),
+            edges=jnp.zeros((len(gs), 0, 2), jnp.int32),
+            names=tuple(g.names for g in gs),
+        )
+
 
 jax.tree_util.register_dataclass(
     Graph,

@@ -20,7 +20,7 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core.dopt import from_log, to_log
-from repro.core.dsim import objective_value, simulate
+from repro.core.dsim import stacked_log_objective
 from repro.core.graph import Graph
 from repro.core.mapper import MapperCfg
 from repro.core.params import ArchParams, ArchSpec, TechParams
@@ -47,11 +47,9 @@ def population_objective(pop, graphs: Graph, objective: str = "edp", spec: ArchS
     """
 
     def one_candidate(tech, arch):
-        def one_workload(g):
-            perf = simulate(tech, arch, g, spec, mcfg)
-            return jnp.log(objective_value(perf, objective))
-
-        return jnp.mean(jax.vmap(one_workload)(graphs))
+        # the same batched-workload path DOpt's loss uses (dsim.stacked_log_objective)
+        val, _ = stacked_log_objective(tech, arch, graphs, objective, spec=spec, mcfg=mcfg)
+        return val
 
     tech, arch = pop
     return jax.vmap(one_candidate)(tech, arch)
@@ -84,8 +82,11 @@ def shard_population(mesh, pop, pop_axes=("pod", "data")):
 def dse_in_shardings(mesh, pop, graphs):
     axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
     pop_s = jax.tree.map(lambda _: NamedSharding(mesh, P(axes)), pop)
+    # guard like shard_population: meshes without a "model" axis replicate
+    # the workloads instead of raising KeyError
+    w = mesh.shape["model"] if "model" in mesh.axis_names else 0
     g_s = jax.tree.map(
-        lambda x: NamedSharding(mesh, P("model") if x.ndim >= 1 and x.shape[0] % mesh.shape["model"] == 0 else P()),
+        lambda x: NamedSharding(mesh, P("model") if w and x.ndim >= 1 and x.shape[0] % w == 0 else P()),
         graphs,
     )
     return (pop_s, g_s)

@@ -111,12 +111,19 @@ def _popsim_kernel(graph_ref, chw_ref, out_ref, *, n_vertices: int):
 
         t_core = jnp.maximum(t_comp, t_onchip)
         t_exposed = jnp.maximum(t_main - hide * t_core, 0.0)
-        # integer-cycle quantization per tile (matches mapper.py)
-        t_vertex = tiles * jnp.ceil((t_core + t_exposed) * freq / tiles) / freq
+        # integer-cycle quantization per tile; no-op (padding) vertices are
+        # free and excluded from diagnostics (matches mapper.py)
+        active = (
+            jnp.sum(n_comp) + jnp.sum(n_read) + jnp.sum(n_write) + alloc_gbuf + has_main
+        ) > 0
+        t_vertex = tiles * jnp.ceil((t_core + t_exposed) * freq / tiles) / freq * active
 
+        # EMA of the *demanded* (no-overlap) utilization — matches mapper.py's
+        # carry-free recurrence, not the post-gating realized time
+        t_full = tiles * jnp.ceil((t_core + t_main) * freq / tiles) / freq
         used_bw = jnp.where(
-            t_vertex > 0,
-            (n_read[_GBUF] + n_write[_GBUF]) / jnp.maximum(t_vertex, 1e-30) / bw[:, _GBUF],
+            t_full > 0,
+            (n_read[_GBUF] + n_write[_GBUF]) / jnp.maximum(t_full, 1e-30) / bw[:, _GBUF],
             0.0,
         )
         bw_ema = 0.8 * bw_ema + 0.2 * jnp.clip(used_bw, 0.0, 2.0)
@@ -129,9 +136,9 @@ def _popsim_kernel(graph_ref, chw_ref, out_ref, *, n_vertices: int):
             cycles + t_vertex * freq,
             e_dyn + e_v,
             t_comp_acc + t_comp,
-            t_mem_acc + t_onchip,
+            t_mem_acc + t_onchip * active,
             t_exp_acc + t_exposed,
-            tiles_acc + tiles,
+            tiles_acc + tiles * active,
             occupancy,
             bw_ema,
         )

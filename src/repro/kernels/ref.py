@@ -111,19 +111,27 @@ def popsim_reference(graph_packed: jax.Array, chw_packed: jax.Array) -> jax.Arra
 
             t_core = jnp.maximum(t_comp, t_onchip)
             t_exposed = jnp.maximum(t_main - hide * t_core, 0.0)
-            # integer-cycle quantization per tile (matches mapper.py)
-            t_vertex = tiles * jnp.ceil((t_core + t_exposed) * freq / tiles) / freq
+            # integer-cycle quantization per tile; no-op (padding) vertices
+            # are free and excluded from diagnostics (matches mapper.py)
+            active = (
+                jnp.sum(n_comp) + jnp.sum(n_read) + jnp.sum(n_write) + alloc_gbuf + has_main
+            ) > 0
+            t_vertex = tiles * jnp.ceil((t_core + t_exposed) * freq / tiles) / freq * active
 
+            # demanded-utilization EMA input (matches mapper.py / popsim_kernel)
+            t_full = tiles * jnp.ceil((t_core + t_main) * freq / tiles) / freq
             used_bw = jnp.where(
-                t_vertex > 0,
-                (n_read[pk._GBUF] + n_write[pk._GBUF]) / jnp.maximum(t_vertex, 1e-30) / bw[pk._GBUF],
+                t_full > 0,
+                (n_read[pk._GBUF] + n_write[pk._GBUF]) / jnp.maximum(t_full, 1e-30) / bw[pk._GBUF],
                 0.0,
             )
             bw_ema = 0.8 * bw_ema + 0.2 * jnp.clip(used_bw, 0.0, 2.0)
             occupancy = jnp.minimum(0.5 * occupancy + alloc_gbuf, cap_gbuf / pk.HEADROOM)
 
             e_v = jnp.sum(n_read * re_pb + n_write * we_pb) + jnp.sum(n_comp * e_flop)
-            out = jnp.stack([t_vertex * freq, e_v, t_comp, t_onchip, t_exposed, tiles, 0.0, 0.0])
+            out = jnp.stack(
+                [t_vertex * freq, e_v, t_comp, t_onchip * active, t_exposed, tiles * active, 0.0, 0.0]
+            )
             return (occupancy, bw_ema), out
 
         _, outs = jax.lax.scan(step, (jnp.float32(0.0), jnp.float32(0.0)), graph_packed)

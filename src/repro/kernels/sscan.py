@@ -13,6 +13,14 @@ fori_loop steps time; every op is [block_c, N]-shaped (VPU lanes on N,
 sublanes on channels).
 
 Validated against the exact per-step recurrence in tests/test_kernels.py.
+
+This module also hosts :func:`affine_scan` — the first-order affine prefix
+``s_i = decay * s_{i-1} + b_i`` the DSim mapper's bandwidth-EMA carry
+dispatches through when ``MapperCfg.scan_impl == "pallas"``.  The forward
+runs as a Pallas kernel (state resident in VMEM scratch, sequential grid
+over chunks, through the ``runtime.dragon_pallas_call`` seam); the backward
+is the closed-form reversed scan (``custom_vjp``), so the mapper stays
+fully differentiable.
 """
 from __future__ import annotations
 
@@ -95,3 +103,88 @@ def selective_scan_pallas(
         interpret=interpret,
         dimension_semantics=("parallel", "parallel", "arbitrary"),
     )(u, dt, A, Bm, Cm, D.reshape(1, C))
+
+
+# --------------------------------------------------------------------------- #
+# first-order affine prefix scan (the mapper's bw-EMA carry)
+# --------------------------------------------------------------------------- #
+
+
+def _affine_scan_kernel(b_ref, s_ref, state_ref, *, chunk: int, decay: float):
+    ci = pl.program_id(0)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    b = b_ref[...].astype(jnp.float32)  # [1, chunk]
+
+    def step(t, carry):
+        state, out = carry  # [1, 1], [1, chunk]
+        b_t = jax.lax.dynamic_slice(b, (0, t), (1, 1))
+        state = decay * state + b_t
+        out = jax.lax.dynamic_update_slice(out, state, (0, t))
+        return state, out
+
+    state, out = jax.lax.fori_loop(0, chunk, step, (state_ref[...], jnp.zeros_like(b)))
+    state_ref[...] = state
+    s_ref[...] = out.astype(s_ref.dtype)
+
+
+def _affine_scan_pallas(decay: float, add: jax.Array, *, chunk: int = 512,
+                        interpret: bool | None = None) -> jax.Array:
+    """Inclusive prefix of ``s' = decay*s + b`` (s0 = 0) as a Pallas kernel.
+
+    The running state lives in a [1, 1] VMEM scratch that carries across the
+    sequential chunk grid; trailing padding (b = 0) only touches dropped
+    outputs, never the prefix of real elements."""
+    (v,) = add.shape
+    chunk = min(chunk, max(v, 1))
+    vp = -(-v // chunk) * chunk
+    b = jnp.pad(add, (0, vp - v)).reshape(1, vp)
+    kernel = functools.partial(_affine_scan_kernel, chunk=chunk, decay=float(decay))
+    out = runtime.dragon_pallas_call(
+        kernel,
+        grid=(vp // chunk,),
+        in_specs=[pl.BlockSpec((1, chunk), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((1, chunk), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, vp), add.dtype),
+        scratch_shapes=[runtime.vmem_scratch((1, 1), jnp.float32)],
+        interpret=interpret,
+        dimension_semantics=("arbitrary",),
+    )(b)
+    return out[0, :v]
+
+
+def _affine_prefix(decay: float, add: jax.Array) -> jax.Array:
+    """The backward workhorse: core.mapper's associative inclusive prefix.
+
+    Imported lazily (mapper itself lazily imports :func:`affine_scan` for
+    its pallas dispatch, so neither module needs the other at import time);
+    one definition of the recurrence keeps the VJP in lockstep with the
+    forward semantics."""
+    from repro.core.mapper import affine_prefix_assoc
+
+    return affine_prefix_assoc(decay, add)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def affine_scan(decay: float, add: jax.Array) -> jax.Array:
+    """Differentiable Pallas-backed inclusive prefix of ``s' = decay*s + b``.
+
+    ``s_i = sum_{j<=i} decay^(i-j) b_j``; the VJP is the reversed scan
+    ``db_k = sum_{i>=k} decay^(i-k) g_i`` — another affine prefix, so no
+    residuals beyond the cotangent are needed.
+    """
+    return _affine_scan_pallas(decay, add)
+
+
+def _affine_scan_fwd(decay, add):
+    return _affine_scan_pallas(decay, add), None
+
+
+def _affine_scan_bwd(decay, _res, g):
+    return (jnp.flip(_affine_prefix(decay, jnp.flip(g))),)
+
+
+affine_scan.defvjp(_affine_scan_fwd, _affine_scan_bwd)

@@ -1,0 +1,175 @@
+"""Equivalence of the parallel-depth mapper and the device-resident DOpt loop
+against their sequential references.
+
+  * associative-scan mapper (MapperCfg.scan_impl="assoc", the default) vs the
+    O(V) ``lax.scan`` reference ("ref") — values and gradients;
+  * the opt-in Pallas affine-scan dispatch ("pallas") — values and gradients;
+  * fused chunked-scan optimize() vs the per-step Python loop.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ArchParams, TechParams, optimize, simulate, specialize
+from repro.core.dopt import from_log, to_log
+from repro.core.graph import Graph
+from repro.core.mapper import (
+    MapperCfg,
+    affine_prefix_assoc,
+    map_workload,
+    map_workload_scan,
+    minaffine_prefix_assoc,
+)
+from repro.workloads import get_workload, lm_cell
+
+CLASSIC = ["lstm", "bert_base", "resnet50", "dlrm", "merge_sort"]
+LM = [("granite-3-8b", "train_4k"), ("qwen2.5-32b", "prefill_32k")]
+
+
+def _graphs():
+    for n in CLASSIC:
+        yield n, get_workload(n)
+    for a, s in LM:
+        yield f"{a}:{s}", lm_cell(a, s)
+
+
+@pytest.fixture(scope="module")
+def chw():
+    return specialize(TechParams.default(), ArchParams.default())
+
+
+class TestScanPrimitives:
+    def test_affine_prefix_matches_python(self):
+        x = jnp.asarray(np.random.default_rng(0).uniform(0, 2, 97), jnp.float32)
+        out = np.asarray(affine_prefix_assoc(0.8, x))
+        s, expect = 0.0, []
+        for v in np.asarray(x):
+            s = 0.8 * s + v
+            expect.append(s)
+        np.testing.assert_allclose(out, expect, rtol=1e-5)
+
+    def test_minaffine_prefix_matches_python(self):
+        x = jnp.asarray(np.random.default_rng(1).uniform(0, 3, 131), jnp.float32)
+        cap = jnp.float32(2.5)
+        out = np.asarray(minaffine_prefix_assoc(0.5, x, cap))
+        s, expect = 0.0, []
+        for v in np.asarray(x):
+            s = min(0.5 * s + v, 2.5)
+            expect.append(s)
+        np.testing.assert_allclose(out, expect, rtol=1e-5)
+        assert out.max() <= 2.5 + 1e-6
+
+    def test_pallas_affine_scan_matches_and_differentiates(self):
+        from repro.kernels.sscan import affine_scan
+
+        x = jnp.asarray(np.random.default_rng(2).uniform(0, 1, 70), jnp.float32)
+        np.testing.assert_allclose(
+            np.asarray(affine_scan(0.8, x)), np.asarray(affine_prefix_assoc(0.8, x)), rtol=1e-5
+        )
+        g_pl = jax.grad(lambda v: jnp.sum(affine_scan(0.8, v) ** 2))(x)
+        g_as = jax.grad(lambda v: jnp.sum(affine_prefix_assoc(0.8, v) ** 2))(x)
+        np.testing.assert_allclose(np.asarray(g_pl), np.asarray(g_as), rtol=1e-4, atol=1e-6)
+
+
+class TestMapperEquivalence:
+    @pytest.mark.parametrize("name,g", list(_graphs()), ids=[n for n, _ in _graphs()])
+    def test_state_matches_reference(self, chw, name, g):
+        ref = map_workload_scan(chw, g, MapperCfg(scan_impl="ref"))
+        for impl in ("assoc",):
+            got = map_workload(chw, g, MapperCfg(scan_impl=impl))
+            np.testing.assert_allclose(float(got.cycles), float(ref.cycles), rtol=1e-4)
+            for f in ("reads", "writes", "peak_alloc"):
+                np.testing.assert_allclose(
+                    np.asarray(getattr(got, f)), np.asarray(getattr(ref, f)), rtol=1e-4
+                )
+
+    @pytest.mark.parametrize(
+        "name,g",
+        [(n, g) for n, g in _graphs() if n in ("lstm", "bert_base", "granite-3-8b:train_4k")],
+        ids=["lstm", "bert_base", "granite"],
+    )
+    def test_grad_of_edp_matches_reference(self, name, g):
+        arch_z = to_log(ArchParams.default())
+        tech_z = to_log(TechParams.default())
+
+        def make(cfg):
+            def loss(tz, az):
+                perf = simulate(from_log(tz), from_log(az), g, mcfg=cfg)
+                return jnp.log(perf.edp)
+
+            return jax.grad(loss, argnums=(0, 1))
+
+        g_assoc = make(MapperCfg(scan_impl="assoc"))(tech_z, arch_z)
+        g_ref = make(MapperCfg(scan_impl="ref"))(tech_z, arch_z)
+        for a, r in zip(jax.tree.leaves(g_assoc), jax.tree.leaves(g_ref)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(r), rtol=1e-3, atol=1e-6)
+
+    def test_pallas_dispatch_matches_reference(self, chw):
+        g = get_workload("lstm")
+        ref = map_workload_scan(chw, g, MapperCfg(scan_impl="ref"))
+        got = map_workload(chw, g, MapperCfg(scan_impl="pallas"))
+        np.testing.assert_allclose(float(got.cycles), float(ref.cycles), rtol=1e-4)
+
+        def loss(tz, cfg):
+            return jnp.log(simulate(from_log(tz), ArchParams.default(), g, mcfg=cfg).edp)
+
+        gp = jax.grad(loss)(to_log(TechParams.default()), MapperCfg(scan_impl="pallas"))
+        gr = jax.grad(loss)(to_log(TechParams.default()), MapperCfg(scan_impl="ref"))
+        for a, r in zip(jax.tree.leaves(gp), jax.tree.leaves(gr)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(r), rtol=1e-3, atol=1e-6)
+
+    def test_unknown_impl_raises(self, chw):
+        with pytest.raises(ValueError):
+            map_workload(chw, get_workload("lstm"), MapperCfg(scan_impl="nope"))
+
+
+class TestStackedWorkloads:
+    def test_stack_pads_and_preserves_totals(self):
+        gs = [get_workload("lstm"), get_workload("bert_base")]
+        st = Graph.stack(gs)
+        vmax = max(g.n_vertices for g in gs)
+        assert st.n_comp.shape[:2] == (2, vmax)
+        np.testing.assert_allclose(
+            np.asarray(st.n_comp).sum(), sum(float(g.total_flops) for g in gs), rtol=1e-6
+        )
+
+    def test_padding_is_free_in_the_mapper(self):
+        chw = specialize(TechParams.default(), ArchParams.default())
+        g = get_workload("lstm")
+        padded = g.pad_to(g.n_vertices + 50)
+        for impl in ("assoc", "ref"):
+            m0 = map_workload(chw, g, MapperCfg(scan_impl=impl))
+            m1 = map_workload(chw, padded, MapperCfg(scan_impl=impl))
+            for f in ("cycles", "n_tiles", "t_mem", "t_comp", "t_exposed_main"):
+                np.testing.assert_allclose(
+                    float(getattr(m1, f)), float(getattr(m0, f)), rtol=1e-6
+                )
+
+
+class TestFusedOptimizeEquivalence:
+    def test_fused_reproduces_per_step_loop(self):
+        gs = [get_workload("lstm"), get_workload("merge_sort")]
+        kw = dict(objective="edp", steps=12, lr=0.1)
+        rf = optimize(gs, fused=True, **kw)
+        rl = optimize(gs, fused=False, **kw)
+        for k in rf.history:
+            np.testing.assert_allclose(rf.history[k], rl.history[k], rtol=1e-4)
+        for a, b in zip(jax.tree.leaves((rf.tech, rf.arch)), jax.tree.leaves((rl.tech, rl.arch))):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4)
+
+    def test_chunked_matches_single_dispatch(self):
+        g = get_workload("lstm")
+        r1 = optimize(g, steps=10, lr=0.1, fused=True, chunk=10)
+        r2 = optimize(g, steps=10, lr=0.1, fused=True, chunk=3)
+        np.testing.assert_allclose(r1.history["objective"], r2.history["objective"], rtol=1e-5)
+
+    def test_zero_steps_is_a_noop(self):
+        g = get_workload("lstm")
+        res = optimize(g, steps=0, lr=0.1)
+        assert res.history["objective"] == []
+        np.testing.assert_allclose(
+            np.asarray(res.tech.cell_read_latency),
+            np.asarray(TechParams.default().cell_read_latency),
+            rtol=1e-6,
+        )
