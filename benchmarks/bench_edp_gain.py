@@ -75,7 +75,7 @@ def run(quick: bool = False) -> dict:
                    base_area_mm2=round(base_area, 1))
         out[name] = row
         emit("edp_gain", row)
-    save_json("edp_gain", out)
+    save_json("edp_gain", out, quick=quick)
     return out
 
 

@@ -65,7 +65,7 @@ def run(dryrun_dir: str | None = None, quick: bool = False) -> dict:
         )
         rows.append(row)
         emit("roofline", row)
-    save_json("roofline", rows)
+    save_json("roofline", rows, quick=quick)
     return {"rows": rows}
 
 

@@ -41,7 +41,7 @@ def run(quick: bool = False) -> dict:
     gain = out["slots4"]["tok_per_s"] / max(out["slots1"]["tok_per_s"], 1e-9)
     emit("serving", dict(batching_throughput_gain=round(gain, 2)))
     out["batching_gain"] = gain
-    save_json("serving", out)
+    save_json("serving", out, quick=quick)
     return out
 
 

@@ -95,7 +95,7 @@ def run(quick: bool = False) -> dict:
                    popsim_per_candidate_us=per_candidate_us)
     emit("sim_speed", dict(summary="1", acc_range=f"{min(accs):.2f}..{max(accs):.2f}",
                            speedup_geomean=round(summary["speedup_geomean"], 1)))
-    save_json("sim_speed", summary)
+    save_json("sim_speed", summary, quick=quick)
     return summary
 
 

@@ -56,7 +56,7 @@ def run(quick: bool = False) -> dict:
         out["targets_100x"]["joint_arch_tech_achieved"] = round(joint, 1)
         emit("tech_targets", dict(goal="100x_edp_bert_joint", achieved=round(joint, 1),
                                   epochs=len(res.history["edp"])))
-    save_json("tech_targets", out)
+    save_json("tech_targets", out, quick=quick)
     return out
 
 

@@ -15,9 +15,17 @@ def emit(table: str, row: dict):
     print(f"[bench:{table}] " + " ".join(parts), flush=True)
 
 
-def save_json(name: str, obj):
+def save_json(name: str, obj, quick: bool = False):
+    """Persist one benchmark's results.
+
+    Full runs own the canonical ``results/bench/<name>.json`` files that get
+    committed; ``--quick`` probes (CI trajectory checks, local smoke) write
+    ``<name>_quick.json`` instead so they can never clobber a recorded full
+    run.  Every bench must thread its ``quick`` flag through here.
+    """
     os.makedirs(os.path.join(RESULTS_DIR, "bench"), exist_ok=True)
-    path = os.path.join(RESULTS_DIR, "bench", name + ".json")
+    suffix = "_quick" if quick else ""
+    path = os.path.join(RESULTS_DIR, "bench", name + suffix + ".json")
     with open(path, "w") as f:
         json.dump(obj, f, indent=1, default=float)
     return path

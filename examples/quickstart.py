@@ -12,7 +12,7 @@ sys.path.insert(0, "src")
 
 import jax
 
-from repro.core import ArchParams, TechParams, optimize, simulate
+from repro.core import ArchParams, TechParams, load_arch, optimize, parse_arch, simulate
 from repro.workloads import get_workload
 
 
@@ -29,12 +29,29 @@ def main():
           f"energy {float(perf.energy)*1e3:8.2f} mJ   "
           f"area {float(perf.area):6.1f} mm^2   EDP {float(perf.edp):.3e}")
 
-    # 3. the WHOLE simulator is differentiable ------------------------------
+    # 3. architectures are text: the .dhd description language --------------
+    #    (library: base / edge / mobile / datacenter / rram_cim / hbm_class /
+    #     wafer_scale — see src/repro/configs/arch/ and docs/dhdl.md)
+    edge = load_arch("edge")
+    p_edge = simulate(edge.tech, edge.arch, g, edge.spec)
+    print(f"edge.dhd : runtime {float(p_edge.runtime)*1e3:8.2f} ms   "
+          f"energy {float(p_edge.energy)*1e3:8.2f} mJ   "
+          f"area {float(p_edge.area):6.1f} mm^2")
+    mine = parse_arch("""
+        arch my_edge inherits edge {          # compose by inheritance
+          memory globalBuf { capacity *= 4 }  # ...and multiplicative tweaks
+          compute systolicArray { x = 128  y = 128 }
+        }""")
+    p_mine = simulate(mine.tech, mine.arch, g, mine.spec)
+    print(f"my_edge  : runtime {float(p_mine.runtime)*1e3:8.2f} ms   "
+          f"(4x buffer + bigger array, straight from text)")
+
+    # 4. the WHOLE simulator is differentiable ------------------------------
     grads = jax.grad(lambda t: simulate(t, arch, g).edp)(tech)
     print(f"d EDP / d DRAM-cell-latency = {float(grads.cell_read_latency[2]):.3e}"
           "  <- gradients through the mapping itself")
 
-    # 4. DOpt: gradient-descend the design (arch + technology jointly) ------
+    # 5. DOpt: gradient-descend the design (arch + technology jointly) ------
     res = optimize(g, objective="edp", steps=40, lr=0.1)
     final = simulate(res.tech, res.arch, g)
     print(f"optimized: runtime {float(final.runtime)*1e3:8.2f} ms   "

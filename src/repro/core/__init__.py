@@ -5,6 +5,14 @@ DSim  : graph.py + trace.py + mapper.py + dsim.py (+ refsim.py baseline)
 DOpt  : dopt.py (+ popsim.py distributed DSE)
 """
 from repro.core.dgen import ConcreteHW, specialize  # noqa: F401
+from repro.core.dhdl import (  # noqa: F401
+    CompiledArch,
+    DhdlError,
+    library_archs,
+    load_arch,
+    parse_arch,
+    serialize_arch,
+)
 from repro.core.dopt import OptResult, derive_tech_targets, optimize  # noqa: F401
 from repro.core.dsim import (  # noqa: F401
     PerfEstimate,

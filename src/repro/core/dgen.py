@@ -124,15 +124,21 @@ def _mem_metrics(
     read_latency = cell_lat + rc_bank + rc_global + periph_delay
     write_latency = read_latency * (type_w @ _WRITE_LAT_MULT)
 
-    # energy per byte: cell read + wire charge (8 bits/byte)
-    wire_e_bit = tech.mem_wire_cap * (side + global_wire) * 1e-15 * _VDD**2
+    # energy per byte: cell read + wire charge (8 bits/byte); the wire term
+    # grows with the sqrt of the bandwidth fabric (wider buses, longer
+    # average route) — neutral at bw_scale = 1
+    bw_scale = jnp.maximum(arch.bw_scale, 1e-3)
+    wire_e_bit = tech.mem_wire_cap * (side + global_wire) * 1e-15 * _VDD**2 * jnp.sqrt(bw_scale)
     cell_e_bit = tech.cell_read_power * 1e-12
     read_energy_pb = 8.0 * (cell_e_bit + wire_e_bit)
     write_energy_pb = read_energy_pb * (type_w @ _WRITE_EN_MULT)
 
-    # area: cells + peripheral overhead (smaller peripheral node -> less overhead)
+    # area: cells + peripheral overhead (smaller peripheral node -> less
+    # overhead) + the wider port/wire fabric bought by bw_scale (neutral at
+    # the 1.0 baseline, so provisioned bandwidth is never free)
     overhead = (type_w @ _PERIPH_OVERHEAD) * (tech.peripheral_node / 40.0)
-    mem_area = bits * tech.cell_area * 1e-6 * (1.0 + overhead)  # mm^2
+    fabric = 1.0 + 0.10 * (bw_scale - 1.0)
+    mem_area = bits * tech.cell_area * 1e-6 * (1.0 + overhead) * fabric  # mm^2
 
     # leakage: cells + peripheral logic
     leak_cells = tech.cell_leakage_power * 1e-9 * bits
@@ -143,7 +149,7 @@ def _mem_metrics(
     # replicate with the PE fabric (one port per 8 MACs)
     row_bytes = jnp.sqrt(bank_bits) / 8.0
     port_scale = jnp.ones(N_MEM).at[0].set(local_ports_scale)
-    mem_bw = arch.n_read_ports * port_scale * row_bytes / read_latency
+    mem_bw = arch.n_read_ports * port_scale * row_bytes / read_latency * bw_scale
 
     return dict(
         read_latency=read_latency,

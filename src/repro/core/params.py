@@ -136,6 +136,11 @@ class ArchParams:
     capacity: jax.Array  # bytes
     bank_size: jax.Array  # bytes
     n_read_ports: jax.Array
+    # bandwidth provisioning multiplier per level (1.0 = the port-derived
+    # baseline).  Exposed by the .dhd description language as ``bw`` /
+    # ``bw_scale``; extra bandwidth is not free — dgen charges wire area and
+    # access energy for it, so DOpt can trade it off like any other knob.
+    bw_scale: jax.Array
 
     @staticmethod
     def default() -> "ArchParams":
@@ -155,6 +160,7 @@ class ArchParams:
             capacity=_f([4 * 2**20, 24 * 2**20, 16 * 2**30]),
             bank_size=_f([32 * 2**10, 256 * 2**10, 8 * 2**20]),
             n_read_ports=_f([16.0, 8.0, 8.0]),
+            bw_scale=_f([1.0, 1.0, 1.0]),
         )
 
     @staticmethod
@@ -167,6 +173,7 @@ class ArchParams:
             capacity=_f([2**16, 2**20, 2**30]),
             bank_size=_f([2**12, 2**14, 2**19]),
             n_read_ports=_f([1.0, 1.0, 1.0]),
+            bw_scale=_f([0.25, 0.25, 0.25]),
         )
         hi = ArchParams(
             sys_arr_x=_f(1024.0), sys_arr_y=_f(1024.0), sys_arr_n=_f(64.0),
@@ -176,6 +183,7 @@ class ArchParams:
             capacity=_f([64 * 2**20, 512 * 2**20, 256 * 2**30]),
             bank_size=_f([2**20, 2**23, 2**26]),
             n_read_ports=_f([64.0, 64.0, 64.0]),
+            bw_scale=_f([16.0, 16.0, 16.0]),
         )
         return lo, hi
 

@@ -1,0 +1,396 @@
+"""DHDL front-end: parsing, compilation, serialization, and the
+equivalence guarantees that make text architectures first-class citizens
+(same values AND same gradients as dataclass-built ones)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from tests._hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st
+
+from repro.core import dhdl
+from repro.core.dhdl import (
+    CompiledArch,
+    DhdlError,
+    compile_arch,
+    library_archs,
+    load_arch,
+    parse,
+    parse_arch,
+    serialize_arch,
+)
+from repro.core.dopt import optimize
+from repro.core.dsim import simulate, stacked_log_objective
+from repro.core.graph import Graph
+from repro.core.params import (
+    COMP_CLS,
+    MEM_CLS,
+    MEM_TYPES,
+    ArchParams,
+    ArchSpec,
+    TechParams,
+)
+from repro.workloads import get_workload
+
+
+def _trees_equal(a, b) -> bool:
+    return all(
+        bool(np.array_equal(np.asarray(x), np.asarray(y)))
+        for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b))
+    )
+
+
+# --------------------------------------------------------------------------- #
+# parsing + lowering semantics
+# --------------------------------------------------------------------------- #
+
+
+class TestParse:
+    def test_units(self):
+        ca = parse_arch(
+            """
+            arch a {
+              frequency = 2 GHz
+              memory globalBuf { capacity = 4MiB  bank_size = 32 KiB }
+              tech { memory mainMem { cell_read_latency = 10 ns } }
+            }
+            """,
+            env={},
+        )
+        assert float(ca.arch.frequency) == 2e9
+        assert float(ca.arch.capacity[1]) == 4 * 2**20
+        assert float(ca.arch.bank_size[1]) == 32 * 2**10
+        assert float(ca.tech.cell_read_latency[2]) == pytest.approx(10e-9)
+
+    def test_comments_and_defaults(self):
+        ca = parse_arch("# hi\narch a { // nothing overridden\n }\n", env={})
+        assert _trees_equal(ca.arch, ArchParams.default())
+        assert _trees_equal(ca.tech, TechParams.default())
+        assert ca.spec == ArchSpec()
+
+    def test_inherit_and_multiplier(self):
+        ca = parse_arch(
+            """
+            arch parent { memory globalBuf { capacity = 10 MiB } }
+            arch child inherits parent {
+              memory globalBuf { capacity *= 2 }
+              tech { memory globalBuf { cell_read_latency *= 0.5 } }
+            }
+            """,
+            env={},
+        )
+        assert float(ca.arch.capacity[1]) == 20 * 2**20
+        assert float(ca.tech.cell_read_latency[1]) == pytest.approx(
+            float(TechParams.default().cell_read_latency[1]) * 0.5
+        )
+
+    def test_banks_derives_bank_size(self):
+        ca = parse_arch(
+            "arch a { memory mainMem { capacity = 1 GiB  banks = 1024 } }", env={}
+        )
+        assert float(ca.arch.bank_size[2]) == 2**30 / 1024
+
+    def test_enabled_false_removes_unit_from_spec(self):
+        ca = parse_arch(
+            "arch a { compute fpu { enabled = false } memory localMem { enabled = false } }",
+            env={},
+        )
+        assert "fpu" not in ca.spec.comp_units
+        assert "localMem" not in ca.spec.mem_units
+        # masked out of the concrete model, still present in the pytrees
+        chw = ca.specialize()
+        assert float(chw.comp_area[3]) == 0.0
+        assert float(chw.mem_area[0]) == 0.0
+
+    def test_mem_type_selection(self):
+        ca = parse_arch("arch a { memory globalBuf { type = rram } }", env={})
+        assert ca.spec.mem_type == ("sram", "rram", "dram")
+
+    def test_vdd_folds_into_energy_refs(self):
+        hi = parse_arch("arch a { tech { vdd = 0.9 } }", env={})
+        lo = parse_arch("arch a { tech { vdd = 0.45 } }", env={})
+        ratio = np.asarray(lo.tech.cell_read_power) / np.asarray(hi.tech.cell_read_power)
+        np.testing.assert_allclose(ratio, 0.25, rtol=1e-6)  # ~V^2
+
+    def test_vdd_multiplier_scales_inherited_voltage(self):
+        ca = parse_arch(
+            "arch a { tech { vdd = 1.2 } }\n"
+            "arch b inherits a { tech { vdd *= 0.5 } }",
+            env={},
+        )
+        # 1.2 V * 0.5 = 0.6 V -> energy refs scaled by (0.6/0.9)^2
+        ratio = np.asarray(ca.tech.cell_read_power) / np.asarray(
+            TechParams.default().cell_read_power
+        )
+        np.testing.assert_allclose(ratio, (0.6 / 0.9) ** 2, rtol=1e-6)
+
+    def test_muleq_rejected_on_non_numeric_fields(self):
+        for src in (
+            "arch a { memory mainMem { type *= 2 } }",
+            "arch a { compute fpu { enabled *= 0 } }",
+        ):
+            with pytest.raises(DhdlError, match="does not support"):
+                parse_arch(src, env={})
+
+    def test_last_arch_selected_by_default(self):
+        src = "arch a { frequency = 1 GHz }\narch b { frequency = 2 GHz }"
+        assert float(parse_arch(src, env={}).arch.frequency) == 2e9
+        assert float(parse_arch(src, name="a", env={}).arch.frequency) == 1e9
+
+
+class TestErrors:
+    def _err(self, src, **kw):
+        with pytest.raises(DhdlError) as ei:
+            parse_arch(src, env={}, **kw)
+        return str(ei.value)
+
+    def test_unknown_unit_located(self):
+        msg = self._err("arch a {\n  frequency = 2 GHzz\n}", filename="x.dhd")
+        assert "unknown unit 'GHzz'" in msg
+        assert "x.dhd:2:3" in msg
+        assert "^" in msg  # caret under the offending line
+
+    def test_unknown_field_lists_candidates(self):
+        msg = self._err("arch a { memory mainMem { capcity = 1 GiB } }")
+        assert "unknown memory field 'capcity'" in msg
+        assert "capacity" in msg
+
+    def test_unknown_memory_unit(self):
+        msg = self._err("arch a { memory l2cache { capacity = 1 MiB } }")
+        assert "unknown memory unit 'l2cache'" in msg
+        assert "globalBuf" in msg
+
+    def test_banks_and_bank_size_conflict(self):
+        msg = self._err("arch a { memory mainMem { banks = 4 bank_size = 1 MiB } }")
+        assert "both 'banks' and 'bank_size'" in msg
+
+    def test_unknown_parent(self):
+        msg = self._err("arch a inherits ghost { }")
+        assert "unknown architecture 'ghost'" in msg
+
+    def test_inherit_cycle(self):
+        msg = self._err("arch a inherits b { }\narch b inherits a { }")
+        assert "cycle" in msg
+
+    def test_duplicate_arch(self):
+        msg = self._err("arch a { }\narch a { }")
+        assert "duplicate architecture 'a'" in msg
+
+    def test_nonpositive_value(self):
+        msg = self._err("arch a { memory mainMem { capacity = 0 } }")
+        assert "must be > 0" in msg
+
+    def test_bad_mem_type(self):
+        msg = self._err("arch a { memory mainMem { type = flash } }")
+        assert "sram, rram, dram" in msg
+
+    def test_unclosed_block(self):
+        msg = self._err("arch a { memory mainMem { capacity = 1 GiB ")
+        assert "unclosed" in msg
+
+
+# --------------------------------------------------------------------------- #
+# the acceptance equivalence: text == dataclasses, values and gradients
+# --------------------------------------------------------------------------- #
+
+
+class TestEquivalence:
+    def test_base_dhd_is_bitwise_default(self):
+        ca = load_arch("base")
+        assert _trees_equal(ca.arch, ArchParams.default())
+        assert _trees_equal(ca.tech, TechParams.default())
+        assert ca.spec == ArchSpec()
+
+    def test_simulate_matches_dataclass_path(self):
+        g = get_workload("lstm")
+        ca = load_arch("base")
+        p_txt = simulate(ca.tech, ca.arch, g, ca.spec)
+        p_dc = simulate(TechParams.default(), ArchParams.default(), g)
+        np.testing.assert_allclose(float(p_txt.runtime), float(p_dc.runtime), rtol=1e-6)
+        np.testing.assert_allclose(float(p_txt.energy), float(p_dc.energy), rtol=1e-6)
+        np.testing.assert_allclose(float(p_txt.area), float(p_dc.area), rtol=1e-6)
+
+    def test_value_and_grad_match_dataclass_path(self):
+        gs = Graph.stack([get_workload("lstm")])
+        ca = load_arch("base")
+
+        def f(tech, arch):
+            return stacked_log_objective(tech, arch, gs, "edp")[0]
+
+        (v_t, g_t) = jax.value_and_grad(f, argnums=(0, 1))(ca.tech, ca.arch)
+        (v_d, g_d) = jax.value_and_grad(f, argnums=(0, 1))(
+            TechParams.default(), ArchParams.default()
+        )
+        np.testing.assert_allclose(float(v_t), float(v_d), rtol=1e-6)
+        for a, b in zip(jax.tree.leaves(g_t), jax.tree.leaves(g_d)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=0)
+
+    def test_optimize_runs_end_to_end_from_text(self):
+        ca = load_arch("edge")
+        res = optimize(
+            get_workload("lstm"), tech=ca.tech, arch=ca.arch, spec=ca.spec,
+            objective="edp", steps=4, lr=0.05,
+        )
+        assert len(res.history["edp"]) == 4
+        assert all(np.isfinite(res.history["edp"]))
+        assert np.isfinite(float(res.arch.frequency))
+
+    def test_every_library_arch_compiles_and_simulates(self):
+        g = get_workload("merge_sort")
+        assert len(library_archs()) >= 6
+        for name in library_archs():
+            ca = load_arch(name)
+            perf = ca.simulate(g)
+            assert np.isfinite(float(perf.runtime)) and float(perf.runtime) > 0
+            assert np.isfinite(float(perf.energy)) and float(perf.energy) > 0
+
+
+# --------------------------------------------------------------------------- #
+# round-trip + determinism (property-based)
+# --------------------------------------------------------------------------- #
+
+
+def _interp_log(lo, hi, u: float) -> float:
+    return float(np.exp(np.log(lo) + (np.log(hi) - np.log(lo)) * u))
+
+
+def _random_triple(data) -> CompiledArch:
+    """Draw a random architecture inside the DOpt bounds."""
+    a_lo, a_hi = ArchParams.bounds()
+    t_lo, t_hi = TechParams.bounds()
+
+    def draw_tree(lo_tree, hi_tree, cls):
+        kw = {}
+        for f in dataclasses.fields(cls):
+            lo = np.atleast_1d(np.asarray(getattr(lo_tree, f.name)))
+            hi = np.atleast_1d(np.asarray(getattr(hi_tree, f.name)))
+            us = [
+                data.draw(st.floats(0.0, 1.0, allow_nan=False), label=f"{f.name}[{i}]")
+                for i in range(lo.shape[0])
+            ]
+            vals = np.asarray(
+                [_interp_log(l, h, u) for l, h, u in zip(lo, hi, us)], np.float32
+            )
+            orig = np.asarray(getattr(lo_tree, f.name))
+            kw[f.name] = jnp.asarray(vals if orig.ndim else vals[0], jnp.float32)
+        return cls(**kw)
+
+    arch = draw_tree(a_lo, a_hi, ArchParams)
+    tech = draw_tree(t_lo, t_hi, TechParams)
+    mem_type = tuple(data.draw(st.sampled_from(MEM_TYPES), label=f"type{i}") for i in range(3))
+    comp_on = [data.draw(st.booleans(), label=f"comp{i}") for i in range(len(COMP_CLS))]
+    if not any(comp_on):
+        comp_on[0] = True
+    mem_on = [data.draw(st.booleans(), label=f"mem{i}") for i in range(len(MEM_CLS))]
+    spec = ArchSpec(
+        mem_units=tuple(m for m, e in zip(MEM_CLS, mem_on) if e),
+        comp_units=tuple(c for c, e in zip(COMP_CLS, comp_on) if e),
+        mem_type=mem_type,
+    )
+    return CompiledArch(name="prop", spec=spec, arch=arch, tech=tech)
+
+
+class TestRoundTrip:
+    @settings(max_examples=25, deadline=None)
+    @given(data=st.data())
+    def test_parse_serialize_parse_identity(self, data):
+        ca = _random_triple(data)
+        text = serialize_arch(ca)
+        ca2 = parse_arch(text, env={})
+        assert ca2.spec == ca.spec
+        assert _trees_equal(ca2.arch, ca.arch)  # bit-exact float32 round-trip
+        assert _trees_equal(ca2.tech, ca.tech)
+        assert serialize_arch(ca2) == text  # canonical form is a fixed point
+
+    @settings(max_examples=10, deadline=None)
+    @given(data=st.data())
+    def test_compile_deterministic(self, data):
+        ca = _random_triple(data)
+        text = serialize_arch(ca)
+        c1, c2 = parse_arch(text, env={}), parse_arch(text, env={})
+        assert _trees_equal(c1.arch, c2.arch) and _trees_equal(c1.tech, c2.tech)
+        assert c1.spec == c2.spec
+
+    def test_library_archs_round_trip(self):
+        for name in library_archs():
+            ca = load_arch(name)
+            ca2 = parse_arch(serialize_arch(ca), env={})
+            assert ca2.spec == ca.spec
+            assert _trees_equal(ca2.arch, ca.arch) and _trees_equal(ca2.tech, ca.tech)
+
+    def test_compile_deterministic_on_library_source(self):
+        env1 = dhdl.load_library(refresh=True)
+        a1 = compile_arch(env1["wafer_scale"], env1)
+        env2 = dhdl.load_library(refresh=True)
+        a2 = compile_arch(env2["wafer_scale"], env2)
+        assert _trees_equal(a1.arch, a2.arch) and _trees_equal(a1.tech, a2.tech)
+
+
+# --------------------------------------------------------------------------- #
+# golden corpus (same check CI runs via tools/check_dhdl_corpus.py)
+# --------------------------------------------------------------------------- #
+
+
+class TestGoldenCorpus:
+    @pytest.fixture(scope="class")
+    def corpus(self):
+        import importlib.util
+        import os
+
+        path = os.path.join(os.path.dirname(__file__), "..", "tools", "check_dhdl_corpus.py")
+        spec = importlib.util.spec_from_file_location("check_dhdl_corpus", path)
+        mod = importlib.util.module_from_spec(spec)
+        spec.loader.exec_module(mod)
+        return mod
+
+    def test_valid_corpus_compiles_and_round_trips(self, corpus):
+        assert corpus.check_valid_corpus() == []
+
+    def test_invalid_corpus_errors_match_expected_snippets(self, corpus):
+        assert corpus.check_invalid_corpus() == []
+
+
+# --------------------------------------------------------------------------- #
+# finite-difference gradient check through a parsed .dhd model
+# --------------------------------------------------------------------------- #
+
+
+class TestFiniteDifference:
+    # coordinates with smooth (non-STE-surrogate) dependence; the STE knobs
+    # (capacity tiling, systolic wave quantization) intentionally carry
+    # surrogate gradients and are excluded by design
+    COORDS = [
+        ("tech", "cell_read_power", 2),
+        ("tech", "cell_area", 1),
+        ("tech", "node", 1),
+        ("arch", "bw_scale", 2),
+        ("arch", "frequency", None),
+        ("arch", "vect_n", None),
+    ]
+
+    def test_value_and_grad_vs_central_difference(self):
+        ca = load_arch("edge")
+        gs = Graph.stack([get_workload("lstm"), get_workload("merge_sort")])
+
+        def logobj(tech, arch):
+            return stacked_log_objective(tech, arch, gs, "edp", spec=ca.spec)[0]
+
+        for tree, fname, idx in self.COORDS:
+            def f(s):
+                t, a = ca.tech, ca.arch
+                obj = t if tree == "tech" else a
+                v = getattr(obj, fname)
+                v2 = v * s if idx is None else v.at[idx].mul(s)
+                obj2 = dataclasses.replace(obj, **{fname: v2})
+                return logobj(obj2 if tree == "tech" else t,
+                              a if tree == "tech" else obj2)
+
+            val, grad = jax.value_and_grad(f)(jnp.float32(1.0))
+            assert np.isfinite(float(val))
+            eps = 0.05
+            fd = (float(f(jnp.float32(1 + eps))) - float(f(jnp.float32(1 - eps)))) / (2 * eps)
+            assert float(grad) == pytest.approx(fd, rel=5e-2, abs=1e-5), (
+                f"{tree}.{fname}[{idx}]: AD {float(grad)} vs FD {fd}"
+            )
