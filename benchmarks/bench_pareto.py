@@ -1,0 +1,255 @@
+"""Population-scale multi-objective DSE: the latency/energy/area frontier.
+
+Three records, one JSON (``results/bench/pareto.json``; ``--quick`` writes
+``pareto_quick.json`` per the quick-probe convention):
+
+  * **front quality** — size and hypervolume of the constrained Pareto
+    front pareto_dse extracts from a library-seeded population, plus the
+    per-winner metrics, budget slack, and ``.dhd`` round-trip check;
+  * **engine throughput** — member-epochs/sec of the vmapped
+    device-resident population chunk vs *the same trajectories* run as
+    sequential ``optimize(objective="mixed")`` calls (identical starts,
+    weights, budgets, constant penalty weight — the first member's
+    trajectory is asserted equal, so the comparison is work-for-work);
+  * **acceptance gates** — front >= MIN_FRONT mutually non-dominated
+    designs from >= 3 ``.dhd`` seeds, every front member within budget and
+    round-tripping bit-exactly, engine >= MIN_SPEEDUP x sequential.
+
+The sequential baseline pays, per candidate: Graph.stack of the workload
+set, log-space + Adam state init, per-chunk dispatch + host sync, history
+conversion — all host work the population engine does once per *population*
+(and the vmapped mapper batches the math besides).  That per-call overhead
+is not an artifact: it is what multi-start DSE by optimize() loop actually
+costs warm.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, save_json
+from repro.core import optimize, pareto_dse
+from repro.core.dhdl import load_arch, parse_arch
+from repro.core.dsim import simulate_stacked
+from repro.core.graph import Graph
+from repro.core.pareto import dominates
+from repro.core.popsim import (
+    init_population_state,
+    population_chunk,
+    sample_objective_mixes,
+    seed_population,
+)
+from repro.workloads import get_workload
+
+WORKLOADS = ["lstm", "bert_base", "merge_sort"]  # the dopt_throughput stack
+MIN_FRONT = 8
+MIN_SPEEDUP = 10.0
+
+
+def _seed_budgets(seeds, gstack):
+    """Budgets + a run-independent hypervolume box, from the library itself.
+
+    Budgets are the worst-case area/power of the largest seed design —
+    every seed starts feasible, growth-hungry objective mixes run into a
+    binding ceiling.  The hypervolume sample box is anchored on the seeds'
+    (time, energy, area) log metrics — stable across runs as long as the
+    library and workload stack are, so the recorded hypervolume is a
+    comparable trend metric: lo leaves ~e^3 (20x) improvement headroom per
+    axis, ref sits just beyond the worst seed.
+    """
+    from repro.core.dsim import stacked_log_metrics
+
+    areas, powers, logms = [], [], []
+    for nm in seeds:
+        ca = load_arch(nm)
+        p = simulate_stacked(ca.tech, ca.arch, gstack, ca.spec)
+        areas.append(float(np.max(np.asarray(p.area))))
+        powers.append(float(np.max(np.asarray(p.power))))
+        logms.append(np.asarray(stacked_log_metrics(p))[:3])  # time, energy, area
+    logms = np.stack(logms)
+    hv_box = (logms.min(axis=0) - 3.0, logms.max(axis=0) + 0.5)
+    return max(areas), max(powers), hv_box
+
+
+def _throughput(gl, gstack, seeds, population, steps, lr, area_b, power_b):
+    """Engine vs sequential member-epochs/sec on identical trajectories."""
+    key = jax.random.PRNGKey(0)
+    (tech, arch), spec, _ = seed_population(population, seeds, key)
+    weights = sample_objective_mixes(population)
+    mixes = (
+        weights,
+        jnp.full((population,), jnp.float32(area_b)),
+        jnp.full((population,), jnp.float32(power_b)),
+    )
+    pw = jnp.full((steps,), jnp.float32(2.0))  # constant, so optimize() can replay it
+
+    # --- population engine: sustained rate = the chunk dispatch + its host
+    # sync.  State init happens once per *population* and is donated, so two
+    # states are built outside the clock: one to compile, one to time.
+    population_chunk(init_population_state(tech, arch), mixes, gstack, lr, pw, spec=spec)  # compile
+    state = init_population_state(tech, arch)
+    jax.block_until_ready(jax.tree.leaves(state))
+    t0 = time.perf_counter()
+    _, metrics = population_chunk(state, mixes, gstack, lr, pw, spec=spec)
+    metrics = np.asarray(metrics)  # include the host sync the driver pays
+    pop_wall = time.perf_counter() - t0
+    pop_eps = population * steps / pop_wall
+
+    # --- sequential baseline: the same trajectories via optimize() --------
+    # start points are extracted outside the timed loop: a user doing
+    # multi-start DSE holds per-candidate starts already, so only optimize()
+    # itself is on the clock
+    starts = [
+        (jax.tree.map(lambda x: x[i], tech), jax.tree.map(lambda x: x[i], arch))
+        for i in range(population)
+    ]
+
+    def seq_call(i):
+        return optimize(
+            gl,
+            tech=starts[i][0],
+            arch=starts[i][1],
+            spec=spec,
+            objective="mixed",
+            objective_weights=weights[i],
+            area_budget=area_b,
+            power_budget=power_b,
+            penalty_weight=2.0,
+            steps=steps,
+            lr=lr,
+        )
+
+    res0 = seq_call(0)  # compile warm-up — and the same-trajectory proof:
+    np.testing.assert_allclose(
+        np.asarray(res0.history["objective"]), metrics[:, 0, 0], rtol=1e-4
+    )
+    t0 = time.perf_counter()
+    for i in range(population):
+        seq_call(i)
+    seq_wall = time.perf_counter() - t0
+    seq_eps = population * steps / seq_wall
+
+    row = dict(
+        population=population,
+        steps=steps,
+        pop_wall_s=round(pop_wall, 3),
+        seq_wall_s=round(seq_wall, 3),
+        pop_member_epochs_per_s=round(pop_eps, 1),
+        seq_member_epochs_per_s=round(seq_eps, 1),
+        speedup=round(pop_eps / seq_eps, 1),
+    )
+    emit("pareto_throughput", row)
+    return row
+
+
+def run(quick: bool = False, population: int | None = None, steps: int | None = None) -> dict:
+    seeds = ("base", "edge", "datacenter") if quick else ("base", "edge", "mobile", "datacenter", "hbm_class")
+    population = (12 if quick else 32) if population is None else population
+    steps = (8 if quick else 24) if steps is None else steps
+    lr = 0.1
+    gl = [get_workload(n) for n in WORKLOADS]
+    gstack = Graph.stack(list(gl))
+    area_b, power_b, hv_box = _seed_budgets(seeds, gstack)
+
+    thr = _throughput(gl, gstack, seeds, population, steps, lr, area_b, power_b)
+
+    t0 = time.perf_counter()
+    res = pareto_dse(
+        gl,
+        seeds=seeds,
+        population=population,
+        steps=steps,
+        lr=lr,
+        area_budget=area_b,
+        power_budget=power_b,
+        penalty_weight=(0.25, 4.0),
+        key=0,
+        hv_box=hv_box,
+    )
+    dse_wall = time.perf_counter() - t0
+
+    # --- acceptance checks: non-domination, budgets, .dhd round-trips -----
+    sub = jnp.asarray(res.front_log_metrics)
+    mutually_nd = bool(
+        res.front.size == 0
+        or not np.asarray(dominates(sub[:, None], sub[None, :])).any()
+    )
+    budget_ok = bool(res.feasible[res.front].all()) if res.front.size else False
+    roundtrip_ok = True
+    for w in res.winners:
+        ca = parse_arch(w["dhd"])
+        i = w["index"]
+        for got, want in zip(
+            jax.tree.leaves((ca.tech, ca.arch)),
+            jax.tree.leaves(
+                (jax.tree.map(lambda x: x[i], res.tech), jax.tree.map(lambda x: x[i], res.arch))
+            ),
+        ):
+            roundtrip_ok &= bool(np.array_equal(np.asarray(got), np.asarray(want)))
+
+    front_row = dict(
+        front_size=int(res.front.size),
+        hypervolume=round(res.hypervolume, 4),
+        feasible=int(res.feasible.sum()),
+        population=population,
+        seeds=len(seeds),
+        mutually_non_dominated=mutually_nd,
+        budget_ok=budget_ok,
+        roundtrip_ok=roundtrip_ok,
+        wall_s=round(dse_wall, 1),
+    )
+    emit("pareto_front", front_row)
+
+    summary = dict(
+        workloads=WORKLOADS,
+        seeds=list(seeds),
+        population=population,
+        steps=steps,
+        lr=lr,
+        area_budget_mm2=round(area_b, 1),
+        power_budget_w=round(power_b, 2),
+        budget_tol=0.05,
+        throughput=thr,
+        front=front_row,
+        hv_lo=None if res.front.size == 0 else [round(float(x), 4) for x in res.hv_lo],
+        hv_ref=None if res.front.size == 0 else [round(float(x), 4) for x in res.hv_ref],
+        winners=[
+            {k: v for k, v in w.items()}  # includes the serialized .dhd text
+            for w in res.winners
+        ],
+    )
+
+    checks = []
+    if front_row["front_size"] < 1:
+        checks.append("empty Pareto front")
+    if not quick:
+        if front_row["front_size"] < MIN_FRONT:
+            checks.append(f"front {front_row['front_size']} < {MIN_FRONT}")
+        if thr["speedup"] < MIN_SPEEDUP:
+            checks.append(f"speedup {thr['speedup']} < {MIN_SPEEDUP}")
+    if not mutually_nd:
+        checks.append("front not mutually non-dominated")
+    if res.front.size and not budget_ok:
+        checks.append("front member violates budget")
+    if not roundtrip_ok:
+        checks.append(".dhd round-trip mismatch")
+    summary["checks_failed"] = checks
+
+    save_json("pareto", summary, quick=quick)
+    if checks:
+        raise SystemExit(f"bench_pareto acceptance checks failed: {checks}")
+    return summary
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--population", type=int, default=None)
+    ap.add_argument("--steps", type=int, default=None)
+    args = ap.parse_args()
+    run(quick=args.quick, population=args.population, steps=args.steps)

@@ -9,6 +9,7 @@
 | tech_targets  | §8.3 Table 3/Fig.3 (importance + 100x EDP)   |
 | edp_gain      | abstract (5x vs published baselines)          |
 | roofline      | EXPERIMENTS.md §Roofline (from the dry-run)   |
+| pareto        | constrained latency/energy/area frontier (population DSE) |
 """
 from __future__ import annotations
 
@@ -26,6 +27,7 @@ def main() -> None:
     from benchmarks import (
         bench_dse,
         bench_edp_gain,
+        bench_pareto,
         bench_roofline,
         bench_serving,
         bench_sim_speed,
@@ -39,6 +41,7 @@ def main() -> None:
         "edp_gain": bench_edp_gain.run,
         "roofline": bench_roofline.run,
         "serving": bench_serving.run,
+        "pareto": bench_pareto.run,
     }
     names = args.only.split(",") if args.only else list(table)
     failures = []

@@ -1,16 +1,35 @@
 """DRAGON applied to the assigned LM fleet: derive technology targets and an
-accelerator design for serving qwen2.5-32b, and compare architectures'
-hardware pressure (which arch wants which technology).
+accelerator design for serving qwen2.5-32b, compare architectures'
+hardware pressure (which arch wants which technology), and map the
+constrained latency/energy/area frontier for the serving cell.
 
-  PYTHONPATH=src python examples/optimize_hw.py
+  PYTHONPATH=src python examples/optimize_hw.py [--skip-pareto]
 """
 import sys
 
 sys.path.insert(0, "src")
 
-from repro.core import ArchParams, TechParams, optimize, simulate
+from repro.core import ArchParams, TechParams, optimize, pareto_dse, simulate
 from repro.core.dopt import derive_tech_targets
 from repro.workloads import lm_cell
+
+
+def pareto_frontier(g_decode, population: int = 12, steps: int = 10):
+    """Population-scale multi-objective DSE: what does the latency/energy/
+    area trade space of decode-serving look like, and which designs win
+    under the edge-class budget?"""
+    res = pareto_dse(
+        g_decode, seeds=("base", "edge", "datacenter"), population=population,
+        steps=steps, lr=0.1, area_budget=700.0, power_budget=150.0, key=0,
+    )
+    print(f"\nPareto frontier of decode serving ({population} members, "
+          f"{steps} epochs, area<=700mm^2, power<=150W): "
+          f"{res.front.size} designs, hypervolume {res.hypervolume:.1f}")
+    for w in res.winners:
+        print(f"   seed={w['seed']:10s} latency {w['time_s']*1e3:7.2f} ms  "
+              f"energy {w['energy_j']:7.3f} J  area {w['area_mm2']:7.1f} mm^2  "
+              f"power {w['power_w']:6.1f} W")
+    return res
 
 
 def main():
@@ -44,6 +63,10 @@ def main():
     moved = sorted(tt["targets"].items(), key=lambda kv: -abs(kv[1]["factor"] - 1))
     for name, t in moved[:5]:
         print(f"   {name:42s} improve {t['factor']:.1f}x")
+
+    # 5. the budget-constrained latency/energy/area frontier -----------------
+    if "--skip-pareto" not in sys.argv:
+        pareto_frontier(g_decode)
 
 
 if __name__ == "__main__":

@@ -15,11 +15,27 @@ from repro.core.dhdl import (  # noqa: F401
 )
 from repro.core.dopt import OptResult, derive_tech_targets, optimize  # noqa: F401
 from repro.core.dsim import (  # noqa: F401
+    PARETO_METRICS,
     PerfEstimate,
+    mixed_log_objective,
     simulate,
     simulate_chw,
     simulate_stacked,
+    stacked_log_metrics,
     stacked_log_objective,
+)
+from repro.core.pareto import (  # noqa: F401
+    hv_ref_point,
+    hypervolume,
+    non_dominated_mask,
+    pareto_front,
+)
+from repro.core.popsim import (  # noqa: F401
+    ParetoResult,
+    pareto_dse,
+    population_chunk,
+    sample_objective_mixes,
+    seed_population,
 )
 from repro.core.graph import Graph, GraphBuilder, workload_optimize  # noqa: F401
 from repro.core.mapper import MapperCfg, MapState, map_workload, map_workload_scan  # noqa: F401

@@ -26,7 +26,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.dsim import stacked_log_objective
+from repro.core.dsim import PARETO_METRICS, mixed_log_objective, stacked_log_objective
 from repro.core.graph import Graph
 from repro.core.mapper import MapperCfg
 from repro.core.params import (
@@ -136,13 +136,18 @@ def _default_chunk(steps: int, target_factor) -> int:
     return -(-steps // n_chunks)
 
 
-def _dopt_step(state, gstack: Graph, lr, spec, objective, area_constraint, opt_over, mcfg):
+def _dopt_step(state, gstack: Graph, lr, mix, spec, objective, area_constraint, opt_over, mcfg):
     """One DOpt epoch (forward + backward + Adam + in-jit log-space clamp).
 
     Top-level (not a closure) so the jitted chunk runner below caches across
-    ``optimize()`` calls: the workload stack and lr are traced *arguments*,
-    not baked-in constants, so any optimize() with matching shapes and
-    static config reuses the compiled program.
+    ``optimize()`` calls: the workload stack, lr and the objective mix are
+    traced *arguments*, not baked-in constants, so any optimize() with
+    matching shapes and static config reuses the compiled program.
+
+    ``mix`` is the traced ``(weights, area_budget, power_budget,
+    penalty_weight)`` tuple consumed when ``objective == "mixed"`` (the
+    multi-objective scalarization); for string objectives it is carried but
+    unused.
     """
     tech_z, arch_z, type_logits, tstate, astate, ystate = state
     dopt2 = opt_over == "both+types"
@@ -151,6 +156,11 @@ def _dopt_step(state, gstack: Graph, lr, spec, objective, area_constraint, opt_o
         # batched multi-workload loss: one vmapped simulate over the stacked
         # workload axis; log-objective keeps gradients scale-free
         tw = None if tl is None else jax.nn.softmax(tl, -1)
+        if objective == "mixed":
+            w, ab, pb, pw = mix
+            return mixed_log_objective(
+                from_log(tz), from_log(az), gstack, w, ab, pb, pw, spec, mcfg, tw
+            )
         return stacked_log_objective(
             from_log(tz), from_log(az), gstack, objective, area_constraint, spec, mcfg, tw
         )
@@ -186,7 +196,7 @@ def _dopt_step(state, gstack: Graph, lr, spec, objective, area_constraint, opt_o
     static_argnames=("spec", "objective", "area_constraint", "opt_over", "mcfg", "n"),
     donate_argnums=(0, 1),
 )
-def _fused_chunk(state, elast_acc, gstack: Graph, lr, *, spec, objective, area_constraint, opt_over, mcfg, n: int):
+def _fused_chunk(state, elast_acc, gstack: Graph, lr, mix, *, spec, objective, area_constraint, opt_over, mcfg, n: int):
     """``n`` device-resident epochs as one ``lax.scan`` dispatch.
 
     Param/Adam state is donated between chunks; elasticity accumulates
@@ -195,7 +205,7 @@ def _fused_chunk(state, elast_acc, gstack: Graph, lr, *, spec, objective, area_c
 
     def body(c, _):
         st, eacc = c
-        st, elast, metrics = _dopt_step(st, gstack, lr, spec, objective, area_constraint, opt_over, mcfg)
+        st, elast, metrics = _dopt_step(st, gstack, lr, mix, spec, objective, area_constraint, opt_over, mcfg)
         return (st, eacc + jnp.abs(elast)), metrics
 
     return jax.lax.scan(body, (state, elast_acc), None, length=n)
@@ -216,8 +226,20 @@ def optimize(
     log_every: int = 0,
     fused: bool = True,  # device-resident chunked-scan epochs (False: per-step loop)
     chunk: int | None = None,  # epochs per device dispatch when fused
+    objective_weights=None,  # [4] PARETO_METRICS mix, for objective="mixed"
+    area_budget: float | None = None,  # worst-case area ceiling (mm^2), mixed only
+    power_budget: float | None = None,  # worst-case power ceiling (W), mixed only
+    penalty_weight: float = 1.0,  # budget-penalty scale, mixed only
 ) -> OptResult:
     """DOpt driver.
+
+    ``objective="mixed"`` descends the constrained scalarization of the
+    (time, energy, area, edp) log-metric vector (dsim.mixed_log_objective):
+    ``objective_weights`` mixes the metrics, ``area_budget``/``power_budget``
+    apply smooth log-space penalties scaled by ``penalty_weight``.  The mix
+    is a *traced* argument, so sequential calls with different mixes reuse
+    one compiled program — this is the per-trajectory form of what
+    popsim.pareto_dse runs as a vmapped population.
 
     ``fused=True`` (default) runs epochs device-resident: chunks of
     ``jax.lax.scan`` over the jitted step with the Adam/param state donated
@@ -246,12 +268,32 @@ def optimize(
     dopt2 = opt_over == "both+types"
     type_logits = jnp.zeros((len(MEM_CLS), len(MEM_TYPES))) if dopt2 else None
     lr_arr = jnp.float32(lr)
+    if objective == "mixed" and objective_weights is None:
+        raise ValueError('objective="mixed" needs objective_weights (len-4 PARETO_METRICS mix)')
+    if objective == "mixed" and area_constraint is not None:
+        raise ValueError('objective="mixed" takes area_budget (log-space penalty), not area_constraint')
+    if objective != "mixed" and not (
+        objective_weights is None and area_budget is None and power_budget is None and penalty_weight == 1.0
+    ):
+        raise ValueError(
+            "objective_weights/area_budget/power_budget/penalty_weight only apply to "
+            f'objective="mixed" (got objective={objective!r}) — they would be silently ignored'
+        )
+    w = jnp.zeros(len(PARETO_METRICS)) if objective_weights is None else jnp.asarray(objective_weights, jnp.float32)
+    if w.shape != (len(PARETO_METRICS),):
+        raise ValueError(f"objective_weights must be shape {(len(PARETO_METRICS),)}, got {w.shape}")
+    mix = (
+        w,
+        jnp.float32(jnp.inf if area_budget is None else area_budget),
+        jnp.float32(jnp.inf if power_budget is None else power_budget),
+        jnp.float32(penalty_weight),
+    )
     static = dict(spec=spec, objective=objective, area_constraint=area_constraint, opt_over=opt_over, mcfg=mcfg)
 
     # the pre-fusion baseline: a per-call jitted step closure, exactly the
     # old driver's cost model (retraces every optimize() invocation, one
     # dispatch + host sync per epoch)
-    step_jit = jax.jit(lambda st: _dopt_step(st, gstack, lr_arr, **static))
+    step_jit = jax.jit(lambda st: _dopt_step(st, gstack, lr_arr, mix, **static))
 
     tstate, astate = adam_init(tech_z), adam_init(arch_z)
     ystate = adam_init(type_logits) if dopt2 else adam_init(jnp.zeros(1))
@@ -282,7 +324,7 @@ def optimize(
         chunk = _default_chunk(steps, target_factor) if chunk is None else max(1, chunk)
         while executed < steps:
             n = min(chunk, steps - executed)
-            (state, elast_acc), metrics = _fused_chunk(state, elast_acc, gstack, lr_arr, n=n, **static)
+            (state, elast_acc), metrics = _fused_chunk(state, elast_acc, gstack, lr_arr, mix, n=n, **static)
             executed += n
             _append(np.asarray(metrics))  # the one host sync per chunk
             if log_every:

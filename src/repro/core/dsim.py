@@ -123,6 +123,86 @@ def stacked_log_objective(
     return jnp.mean(jnp.log(objective_value(perfs, objective, area_constraint))), perfs
 
 
+# --------------------------------------------------------------------------- #
+# multi-objective layer: per-design metric vectors + constrained scalarization
+# --------------------------------------------------------------------------- #
+
+# the metric space multi-objective DSE optimizes over; order is the metric-
+# vector layout shared by stacked_log_metrics / popsim / pareto
+PARETO_METRICS = ("time", "energy", "area", "edp")
+
+
+def stacked_log_metrics(perfs: PerfEstimate) -> jax.Array:
+    """[4] log-metric vector of a batched estimate, in PARETO_METRICS order.
+
+    Each entry is the mean log metric across the stacked workload axis (the
+    log of the geometric-mean metric — scale-free across heterogeneous
+    workloads, matching :func:`stacked_log_objective`'s reduction; area is
+    workload-independent, so its mean is the identity).
+    """
+    return jnp.stack(
+        [
+            jnp.mean(jnp.log(perfs.runtime)),
+            jnp.mean(jnp.log(perfs.energy)),
+            jnp.mean(jnp.log(perfs.area)),
+            jnp.mean(jnp.log(perfs.edp)),
+        ]
+    )
+
+
+def budget_penalty(
+    perfs: PerfEstimate,
+    area_budget: jax.Array,
+    power_budget: jax.Array,
+    sharpness: float = 8.0,
+) -> jax.Array:
+    """Differentiable log-space budget penalty (smooth hinge on violation).
+
+    For each budget B and worst-case metric m over the workload stack, the
+    violation is ``v = log m - log B`` (relative, unit-free) and the penalty
+    is ``softplus(sharpness * v) / sharpness`` — a smooth rectifier that is
+    ~0 well under budget, ~v well over it, and everywhere differentiable
+    (the finite-difference-checkable form the constraint tests rely on).
+    ``jnp.inf`` disables a budget exactly: the violation is ``-inf``, the
+    softplus and its gradient are exactly zero.  Budgets must be positive.
+    """
+    viol_area = jnp.log(jnp.max(perfs.area)) - jnp.log(area_budget)
+    viol_power = jnp.log(jnp.max(perfs.power)) - jnp.log(power_budget)
+    sp = lambda v: jax.nn.softplus(sharpness * v) / sharpness
+    return sp(viol_area) + sp(viol_power)
+
+
+def mixed_log_objective(
+    tech: TechParams,
+    arch: ArchParams,
+    gs: Graph,
+    weights: jax.Array,
+    area_budget: jax.Array | float | None = None,
+    power_budget: jax.Array | float | None = None,
+    penalty_weight: jax.Array | float = 1.0,
+    spec: ArchSpec = ArchSpec(),
+    mcfg: MapperCfg = MapperCfg(),
+    type_weights: jax.Array | None = None,
+) -> tuple[jax.Array, PerfEstimate]:
+    """Constrained scalarization of the PARETO_METRICS vector.
+
+    ``weights`` [4] mixes the log metrics (a one-hot weight reproduces the
+    corresponding single-objective ``stacked_log_objective`` exactly — the
+    off terms are exact float zeros — which is what the population-vs-
+    sequential equivalence tests pin).  Budgets are worst-case-over-
+    workloads area/power ceilings applied as :func:`budget_penalty`, scaled
+    by the schedulable ``penalty_weight``; ``None``/``inf`` disables one.
+    The weights/budgets are *traced* values, so one compiled program serves
+    every objective mix — each population member can descend a different
+    one without retracing.
+    """
+    perfs = simulate_stacked(tech, arch, gs, spec, mcfg, type_weights)
+    val = jnp.dot(jnp.asarray(weights, jnp.float32), stacked_log_metrics(perfs))
+    ab = jnp.float32(jnp.inf) if area_budget is None else area_budget
+    pb = jnp.float32(jnp.inf) if power_budget is None else power_budget
+    return val + penalty_weight * budget_penalty(perfs, ab, pb), perfs
+
+
 def objective_value(perf: PerfEstimate, objective: str, area_constraint: float | None = None) -> jax.Array:
     """Scalar optimization objective (paper §7 / Appendix C).
 

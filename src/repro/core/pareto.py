@@ -1,0 +1,132 @@
+"""Pareto-front extraction and the hypervolume indicator, on-device.
+
+Multi-objective DSE (popsim.pareto_dse) needs two primitives over a
+population's metric vectors, both jnp-only so they run device-resident and
+compose with jit/vmap:
+
+  * :func:`non_dominated_mask` — which designs survive non-dominated
+    filtering (all metrics are COSTS: smaller is better);
+  * :func:`hypervolume` — the volume, w.r.t. a reference point, of the
+    region dominated by a point set: the standard scalar indicator of
+    front quality (bigger is better, monotone under adding non-dominated
+    points).
+
+Conventions:
+
+* a point ``a`` dominates ``b`` iff ``all(a <= b)`` and ``any(a < b)``
+  — duplicates do not dominate each other, so both survive filtering;
+* hypervolume is exact for 2 objectives (staircase sweep) and a
+  deterministic quasi-Monte-Carlo estimate for 3+ (fixed PRNG key).  With a
+  shared sample box (``lo``/``key``), the MC estimate is *exactly* monotone
+  under adding points: every sample dominated by S is dominated by any
+  superset of S.  Pass the same ``lo`` and ``key`` when comparing fronts.
+
+DSE metric vectors live in log space (popsim feeds ``stacked_log_metrics``
+output), where hypervolume measures multiplicative — order-of-magnitude —
+coverage of the latency/energy/area trade space, but nothing here assumes
+it: any minimization metric space works.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "dominates",
+    "non_dominated_mask",
+    "pareto_front",
+    "hypervolume",
+    "hv_ref_point",
+]
+
+
+def dominates(a: jax.Array, b: jax.Array) -> jax.Array:
+    """``a`` dominates ``b`` (costs: all coords <=, at least one <).
+
+    Broadcasts over leading axes: ``dominates(p[:, None], p[None, :])`` is
+    the full [N, N] domination matrix.
+    """
+    return jnp.all(a <= b, axis=-1) & jnp.any(a < b, axis=-1)
+
+
+def non_dominated_mask(points: jax.Array, feasible: jax.Array | None = None) -> jax.Array:
+    """[N] bool mask of the non-dominated subset of ``points`` [N, M].
+
+    ``feasible`` (optional [N] bool) removes constraint-violating designs
+    *before* filtering: infeasible points neither enter the front nor
+    shadow feasible ones.  O(N^2) pairwise — device-friendly and exact; the
+    DSE populations this serves are O(10^2).
+    """
+    pts = jnp.asarray(points)
+    if feasible is not None:
+        # an infeasible point must not dominate anything: move it to +inf,
+        # where it can only *be* dominated
+        pts = jnp.where(jnp.asarray(feasible)[:, None], pts, jnp.inf)
+    dom = dominates(pts[:, None, :], pts[None, :, :])  # dom[i, j]: i dominates j
+    mask = ~jnp.any(dom, axis=0)
+    if feasible is not None:
+        mask = mask & jnp.asarray(feasible)
+    return mask
+
+
+def pareto_front(points, feasible=None) -> np.ndarray:
+    """Host convenience: sorted indices of the non-dominated subset."""
+    return np.nonzero(np.asarray(non_dominated_mask(points, feasible)))[0]
+
+
+def _hv_exact_2d(pts: jax.Array, ref: jax.Array) -> jax.Array:
+    """Exact 2-objective hypervolume: area of the dominated staircase.
+
+    Points beyond ``ref`` are clipped to it — they dominate at most a
+    measure-zero slice of the reference box, so clipping preserves the
+    volume.  Dominated/duplicate points contribute zero height and need no
+    pre-filtering.
+    """
+    p = jnp.minimum(pts, ref)
+    order = jnp.lexsort((p[:, 1], p[:, 0]))  # by x, ties by y
+    x, y = p[order, 0], p[order, 1]
+    y_run = jax.lax.cummin(y)  # best y seen at or left of each x
+    prev = jnp.concatenate([ref[1][None], y_run[:-1]])
+    return jnp.sum((ref[0] - x) * jnp.maximum(prev - y_run, 0.0))
+
+
+def hypervolume(
+    points,
+    ref,
+    *,
+    lo=None,
+    n_samples: int = 16384,
+    key: jax.Array | None = None,
+) -> jax.Array:
+    """Hypervolume of the region dominated by ``points`` [N, M] within the
+    box ``[lo, ref]`` (costs; ``ref`` is the anti-ideal corner).
+
+    * M == 2: exact (``lo``/``n_samples``/``key`` ignored).
+    * M >= 3: quasi-Monte-Carlo with a fixed key — deterministic, and with
+      a common ``lo``/``key`` exactly monotone under adding points (the
+      dominated-sample set can only grow).  ``lo`` defaults to the
+      pointwise minimum of ``points`` clipped to ``ref``; pass an explicit
+      common ``lo`` when comparing the values of different fronts.
+    """
+    pts = jnp.atleast_2d(jnp.asarray(points, jnp.float32))
+    m = pts.shape[-1]
+    ref = jnp.broadcast_to(jnp.asarray(ref, jnp.float32), (m,))
+    if m == 2:
+        return _hv_exact_2d(pts, ref)
+    lo = jnp.minimum(jnp.min(pts, axis=0), ref) if lo is None else jnp.asarray(lo, jnp.float32)
+    key = jax.random.PRNGKey(0) if key is None else key
+    u = jax.random.uniform(key, (int(n_samples), m), minval=lo, maxval=ref)
+    covered = jnp.any(jnp.all(pts[:, None, :] <= u[None, :, :], axis=-1), axis=0)
+    box = jnp.prod(jnp.maximum(ref - lo, 0.0))
+    return box * jnp.mean(covered.astype(jnp.float32))
+
+
+def hv_ref_point(points, margin: float = 0.1) -> jax.Array:
+    """A reference (anti-ideal) point just beyond the worst of ``points``:
+    per-axis max plus ``margin`` of the axis range (at least ``margin``
+    absolute, so degenerate axes still leave room and boundary points
+    contribute volume)."""
+    pts = jnp.atleast_2d(jnp.asarray(points, jnp.float32))
+    hi, lo = jnp.max(pts, axis=0), jnp.min(pts, axis=0)
+    return hi + jnp.maximum(margin * (hi - lo), margin)

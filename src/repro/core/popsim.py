@@ -1,29 +1,484 @@
-"""Population-parallel design-space exploration, sharded over the mesh.
+"""Population-scale multi-objective DSE, sharded over the mesh.
 
-The paper runs DOpt single-host.  At cluster scale, DSE is a population of
-independent gradient-descent candidates (multi-start over the non-convex
-design/technology space, paper Fig. 3) evaluated against a *set* of
-workloads.  We shard:
+The paper runs DOpt single-host on a single scalar objective.  At cluster
+scale, DSE is a *population* of independent gradient-descent trajectories
+(multi-start over the non-convex design/technology space, paper Fig. 3),
+each descending its own constrained objective mix, evaluated against a
+*set* of workloads — and the question architects ask is not "what is the
+optimum" but "what does the latency/energy/area frontier look like, and
+which design wins under a budget".
 
-  * population axis -> mesh ("pod", "data") — candidates are independent;
-  * workload axis   -> mesh ("model",)      — objectives all-reduce.
+This module is that engine:
 
-``dse_step`` is a pjit program lowered/compiled in the multi-pod dry-run
-like every LM cell, proving DRAGON itself distributes.
+  * :func:`seed_population` — [P] starting points from the ``.dhd``
+    architecture library plus log-space jitter (pristine library seeds are
+    kept unjittered);
+  * :func:`sample_objective_mixes` — per-member PARETO_METRICS weight
+    vectors (Dirichlet over a metric subset, deterministic one-hot corners
+    first so the front's extremes are always probed);
+  * :func:`population_chunk` — ``n`` epochs of ``P`` independent Adam
+    trajectories as ONE device dispatch: the per-member DOpt step
+    (dsim.mixed_log_objective value_and_grad + log-space Adam + Alg.-6
+    bounds clamping) vmapped over the member axis inside a ``lax.scan``
+    over epochs, with the Adam/param state donated between dispatches and
+    the per-epoch penalty weight supplied as a scan input so constraint
+    schedules don't force chunk boundaries.  With a mesh, the same body
+    runs under ``runtime.spmd_map`` with members sharded along a mesh axis
+    — trajectories are independent, so there are no collectives;
+  * :func:`pareto_dse` — the driver: seed, descend, extract the
+    non-dominated front (core.pareto), and serialize every winner back to
+    diffable ``.dhd`` text via dhdl.serialize_arch.
+
+Against running the same trajectories as sequential ``optimize()`` calls,
+the population engine removes the per-candidate host work (re-stacking the
+workload set, re-initializing optimizer state, per-call dispatch + sync)
+and batches the mapper across members — benchmarks/bench_pareto.py records
+the member-epochs/sec of both paths.
+
+Legacy single-objective helpers (init_population / population_objective /
+make_dse_step / shard_population / dse_in_shardings) are kept: they are the
+pjit-able DSE step the multi-pod dry-run lowers, proving DRAGON itself
+distributes.
 """
 from __future__ import annotations
 
+from dataclasses import dataclass
 from functools import partial
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.core.dopt import from_log, to_log
-from repro.core.dsim import stacked_log_objective
+from repro.core.dhdl import load_arch, serialize_arch
+from repro.core.dopt import adam_init, adam_update, from_log, to_log
+from repro.core.dsim import (
+    PARETO_METRICS,
+    mixed_log_objective,
+    simulate_stacked,
+    stacked_log_metrics,
+    stacked_log_objective,
+)
 from repro.core.graph import Graph
 from repro.core.mapper import MapperCfg
-from repro.core.params import ArchParams, ArchSpec, TechParams
+from repro.core.params import ArchParams, ArchSpec, TechParams, clamp_params
+from repro.core.pareto import hv_ref_point, hypervolume, non_dominated_mask
+from repro.kernels import runtime
+
+
+# --------------------------------------------------------------------------- #
+# population seeding: .dhd library starts + log-space jitter
+# --------------------------------------------------------------------------- #
+
+
+def seed_population(
+    n: int,
+    seeds: tuple[str, ...] = ("base", "edge", "datacenter"),
+    key: jax.Array | None = None,
+    sigma: float = 0.25,
+) -> tuple[tuple[TechParams, ArchParams], ArchSpec, tuple[str, ...]]:
+    """[P]-stacked (tech, arch) start points from named ``.dhd`` library
+    architectures, round-robin over ``seeds`` with log-normal jitter.
+
+    The first ``len(seeds)`` members are the pristine library designs
+    (jitter only applies from the second pass over the seed list), so every
+    described architecture is always present in the population exactly as
+    written.  Jittered points are clamped into the Alg.-6 bounds.  All
+    seeds must share one ArchSpec — the spec is static under vmap; mixing
+    enabled-unit or memory-type variants needs separate populations.
+    """
+    if n < len(seeds):
+        raise ValueError(f"population {n} smaller than seed list {seeds}")
+    cas = [load_arch(nm) for nm in seeds]
+    spec = cas[0].spec
+    for nm, ca in zip(seeds, cas):
+        if ca.spec != spec:
+            raise ValueError(
+                f"seed {nm!r} has ArchSpec {ca.spec}, expected {spec} "
+                f"(population members share one static spec)"
+            )
+    key = jax.random.PRNGKey(0) if key is None else key
+    member_names = tuple(seeds[i % len(seeds)] for i in range(n))
+    jitter_mask = jnp.asarray([i >= len(seeds) for i in range(n)], jnp.float32)
+
+    def stack_tree(get):
+        leaves_list = [jax.tree.flatten(get(ca))[0] for ca in cas]
+        treedef = jax.tree.structure(get(cas[0]))
+        stacked = [
+            jnp.stack([leaves_list[i % len(cas)][li] for i in range(n)])
+            for li in range(len(leaves_list[0]))
+        ]
+        return jax.tree.unflatten(treedef, stacked)
+
+    tech = stack_tree(lambda ca: ca.tech)
+    arch = stack_tree(lambda ca: ca.arch)
+
+    def jitter(tree, bounds, k):
+        leaves, treedef = jax.tree.flatten(tree)
+        keys = jax.random.split(k, len(leaves))
+        lo_l = jax.tree.flatten(to_log(bounds[0]))[0]
+        hi_l = jax.tree.flatten(to_log(bounds[1]))[0]
+        out = []
+        for leaf, kk, l, h in zip(leaves, keys, lo_l, hi_l):
+            noise = sigma * jax.random.normal(kk, leaf.shape)
+            moved = jnp.exp(jnp.clip(jnp.log(leaf) + noise, l, h))
+            # pristine seeds bypass the log round-trip entirely: the first
+            # pass over the seed list is the library design, bit for bit
+            mask = jitter_mask.reshape((n,) + (1,) * (leaf.ndim - 1)) > 0
+            out.append(jnp.where(mask, moved, leaf))
+        return jax.tree.unflatten(treedef, out)
+
+    kt, ka = jax.random.split(key)
+    return (jitter(tech, TechParams.bounds(), kt), jitter(arch, ArchParams.bounds(), ka)), spec, member_names
+
+
+def sample_objective_mixes(
+    n: int,
+    metrics: tuple[str, ...] = ("time", "energy", "area"),
+    key: jax.Array | None = None,
+    concentration: float = 0.7,
+) -> jax.Array:
+    """[P, 4] PARETO_METRICS weight vectors, one objective mix per member.
+
+    The first ``len(metrics)`` members get deterministic one-hot corners
+    (pure latency, pure energy, ...), so the frontier's extreme points are
+    always descended; the rest draw Dirichlet(``concentration``) mixes over
+    the chosen metric subset (concentration < 1 biases toward edges of the
+    simplex — spread, not consensus).
+    """
+    idx = np.asarray([PARETO_METRICS.index(m) for m in metrics])
+    key = jax.random.PRNGKey(1) if key is None else key
+    alpha = jnp.full((len(idx),), jnp.float32(concentration))
+    draws = jax.random.dirichlet(key, alpha, (n,))  # [n, k]
+    corners = jnp.eye(len(idx), dtype=jnp.float32)
+    k = min(n, len(idx))
+    draws = draws.at[:k].set(corners[:k])
+    w = jnp.zeros((n, len(PARETO_METRICS)), jnp.float32)
+    return w.at[:, idx].set(draws)
+
+
+# --------------------------------------------------------------------------- #
+# the population chunk: P trajectories x n epochs, one dispatch
+# --------------------------------------------------------------------------- #
+
+
+def init_population_state(tech: TechParams, arch: ArchParams):
+    """Optimizer state for [P]-stacked params: per-member log-space params +
+    per-member Adam moments (vmapped adam_init, so AdamState.step is [P])."""
+    tech_z, arch_z = to_log(tech), to_log(arch)
+    return (tech_z, arch_z, jax.vmap(adam_init)(tech_z), jax.vmap(adam_init)(arch_z))
+
+
+def _member_step(tech_z, arch_z, tstate, astate, weights, area_budget, power_budget,
+                 gstack, lr, penalty_w, spec, mcfg, opt_over):
+    """One epoch of one member — mirrors dopt._dopt_step exactly (same loss
+    for a one-hot mix, same Adam, same in-jit log-space Alg.-6 clamp), which
+    is what the population-vs-sequential equivalence tests pin."""
+
+    def loss_fn(tz, az):
+        return mixed_log_objective(
+            from_log(tz), from_log(az), gstack, weights, area_budget, power_budget,
+            penalty_w, spec, mcfg,
+        )
+
+    (val, perfs), (g_t, g_a) = jax.value_and_grad(loss_fn, argnums=(0, 1), has_aux=True)(tech_z, arch_z)
+    if opt_over in ("tech", "both"):
+        upd, tstate = adam_update(g_t, tstate, lr)
+        tech_z = jax.tree.map(lambda p, u: p + u, tech_z, upd)
+    if opt_over in ("arch", "both"):
+        upd, astate = adam_update(g_a, astate, lr)
+        arch_z = jax.tree.map(lambda p, u: p + u, arch_z, upd)
+    tech_z = clamp_params(tech_z, *(to_log(b) for b in TechParams.bounds()))
+    arch_z = clamp_params(arch_z, *(to_log(b) for b in ArchParams.bounds()))
+    # per-epoch row: [scalarized value, log time, log energy, log area, log edp]
+    return (tech_z, arch_z, tstate, astate), jnp.concatenate([val[None], stacked_log_metrics(perfs)])
+
+
+def _population_scan(state, mixes, gstack, lr, pw_schedule, spec, mcfg, opt_over):
+    """The un-jitted chunk body: scan over epochs of the vmapped member step.
+
+    ``pw_schedule`` [n] supplies the (schedulable) budget-penalty weight per
+    epoch as a scan input, so a whole constraint ramp runs in one dispatch.
+    Returns (state', metrics [n, P, 5]).
+    """
+    step = partial(_member_step, spec=spec, mcfg=mcfg, opt_over=opt_over)
+
+    def epoch(st, pw):
+        new, m = jax.vmap(
+            lambda t, a, ts, as_, w, ab, pb: step(t, a, ts, as_, w, ab, pb, gstack, lr, pw)
+        )(*st, *mixes)
+        return new, m
+
+    return jax.lax.scan(epoch, state, pw_schedule)
+
+
+@partial(jax.jit, static_argnames=("spec", "mcfg", "opt_over"), donate_argnums=(0,))
+def _population_chunk_jit(state, mixes, gstack, lr, pw_schedule, *, spec, mcfg, opt_over):
+    return _population_scan(state, mixes, gstack, lr, pw_schedule, spec, mcfg, opt_over)
+
+
+_SHARDED_CACHE: dict = {}
+
+
+def population_chunk(
+    state,
+    mixes,
+    gstack: Graph,
+    lr,
+    pw_schedule,
+    *,
+    spec: ArchSpec = ArchSpec(),
+    mcfg: MapperCfg = MapperCfg(),
+    opt_over: str = "both",
+    mesh=None,
+    axis: str = "pop",
+):
+    """Advance ``P`` independent Adam trajectories ``len(pw_schedule)``
+    epochs device-resident, in one dispatch.
+
+    * ``state``: ``init_population_state`` output (donated — do not reuse);
+    * ``mixes``: ``(weights [P,4], area_budget [P], power_budget [P])``;
+    * ``pw_schedule`` [n]: per-epoch budget-penalty weight (the constraint
+      schedule), a traced scan input;
+    * ``mesh``/``axis``: shard the member axis across mesh devices via
+      ``runtime.spmd_map`` — members are independent, so the mapped body
+      has no collectives; the mesh axis size must divide P.  ``mesh=None``
+      (or a 1-device mesh) runs the plain jitted path.
+
+    Returns ``(state', metrics [n, P, 5])`` with per-epoch rows
+    ``[scalarized value, log time, log energy, log area, log edp]``.
+    """
+    if opt_over not in ("tech", "arch", "both"):
+        # the population engine has no DOpt2 type-logits state; an unknown
+        # opt_over would otherwise run a full descent that never moves
+        raise ValueError(
+            f"opt_over={opt_over!r} not supported by the population engine "
+            "(use 'tech', 'arch' or 'both'; DOpt2 'both+types' is optimize()-only)"
+        )
+    lr = jnp.float32(lr)
+    pw_schedule = jnp.asarray(pw_schedule, jnp.float32)
+    if mesh is None or mesh.size == 1:
+        return _population_chunk_jit(
+            state, mixes, gstack, lr, pw_schedule, spec=spec, mcfg=mcfg, opt_over=opt_over
+        )
+    if axis not in mesh.axis_names:
+        raise ValueError(f"mesh has axes {mesh.axis_names}, no {axis!r} axis")
+    p = jax.tree.leaves(state[0])[0].shape[0]
+    shards = mesh.shape[axis]
+    if p % shards != 0:
+        raise ValueError(
+            f"mesh axis {axis!r}={shards} must divide the population (got P={p}) — "
+            f"pad the population to a multiple of {shards}"
+        )
+    cache_key = (mesh, axis, spec, mcfg, opt_over, int(pw_schedule.shape[0]))
+    fn = _SHARDED_CACHE.get(cache_key)
+    if fn is None:
+        body = partial(_population_scan, spec=spec, mcfg=mcfg, opt_over=opt_over)
+        mapped = runtime.spmd_map(
+            lambda st, mx, gs, lr_, pws: body(st, mx, gs, lr_, pws),
+            mesh=mesh,
+            in_specs=(P(axis), P(axis), P(), P(), P()),
+            out_specs=(P(axis), P(None, axis)),
+        )
+        # same donation contract as the single-device path: state is consumed
+        fn = _SHARDED_CACHE[cache_key] = jax.jit(mapped, donate_argnums=(0,))
+    return fn(state, mixes, gstack, lr, pw_schedule)
+
+
+@partial(jax.jit, static_argnames=("spec", "mcfg"))
+def population_log_metrics(
+    tech: TechParams,
+    arch: ArchParams,
+    gstack: Graph,
+    spec: ArchSpec = ArchSpec(),
+    mcfg: MapperCfg = MapperCfg(),
+):
+    """Final-population evaluation: per-member ``[P, 4]`` log-metric vectors
+    plus the worst-case-over-workloads raw area [P] and power [P] the budget
+    feasibility check is defined on (matching dsim.budget_penalty)."""
+
+    def one(ti, ai):
+        perfs = simulate_stacked(ti, ai, gstack, spec, mcfg)
+        return stacked_log_metrics(perfs), jnp.max(perfs.area), jnp.max(perfs.power)
+
+    return jax.vmap(one)(tech, arch)
+
+
+# --------------------------------------------------------------------------- #
+# the driver: seed -> descend -> Pareto front -> .dhd winners
+# --------------------------------------------------------------------------- #
+
+
+@dataclass
+class ParetoResult:
+    tech: TechParams  # [P] final technology params
+    arch: ArchParams  # [P] final architecture params
+    spec: ArchSpec
+    seeds: tuple[str, ...]  # per-member seed architecture names
+    weights: np.ndarray  # [P, 4] objective mixes
+    area_budget: np.ndarray  # [P]
+    power_budget: np.ndarray  # [P]
+    history: np.ndarray  # [steps, P, 5]: value + log metrics per epoch
+    log_metrics: np.ndarray  # [P, 4] final log-metric vectors
+    area: np.ndarray  # [P] final worst-case area (mm^2)
+    power: np.ndarray  # [P] final worst-case power (W)
+    feasible: np.ndarray  # [P] bool: meets budgets within tolerance
+    front: np.ndarray  # indices of the non-dominated feasible subset
+    front_log_metrics: np.ndarray  # [F, len(metrics)] points the front lives on
+    hypervolume: float  # MC hypervolume of the front (log-metric space)
+    hv_lo: np.ndarray  # sample-box lower corner the hypervolume used
+    hv_ref: np.ndarray  # reference point (box upper corner) the hypervolume used
+    winners: list  # one dict per front member, incl. serialized .dhd text
+
+
+def pareto_dse(
+    graphs: list[Graph] | Graph,
+    seeds: tuple[str, ...] = ("base", "edge", "datacenter"),
+    population: int = 24,
+    steps: int = 24,
+    lr: float = 0.1,
+    metrics: tuple[str, ...] = ("time", "energy", "area"),
+    area_budget: float | None = None,
+    power_budget: float | None = None,
+    penalty_weight: tuple[float, float] = (0.25, 4.0),
+    budget_tol: float = 0.05,
+    opt_over: str = "both",
+    sigma: float = 0.25,
+    concentration: float = 0.7,
+    chunk: int | None = None,
+    spec_override: ArchSpec | None = None,
+    mcfg: MapperCfg = MapperCfg(),
+    mesh=None,
+    key: int | jax.Array = 0,
+    hv_box: tuple | None = None,
+) -> ParetoResult:
+    """Population-scale constrained multi-objective DSE.
+
+    Seeds ``population`` members from the ``.dhd`` library (+ log-space
+    jitter), gives each its own objective mix over ``metrics`` (and the
+    shared area/power budgets), advances all trajectories device-resident
+    with the budget-penalty weight ramped geometrically across
+    ``penalty_weight = (start, end)``, then extracts the feasible
+    non-dominated front, its hypervolume, and serializes every winner back
+    to canonical ``.dhd`` text.
+
+    ``chunk`` bounds epochs per dispatch (default: all ``steps`` in one —
+    the penalty schedule rides the scan input, so chunking is only a
+    compile-time/host-visibility knob, not a semantic one).
+
+    ``hv_box`` optionally fixes the hypervolume sample box as ``(lo, ref)``
+    arrays in the selected log-metric space.  The default box is derived
+    from this run's feasible points, which is fine for a single frontier
+    but NOT comparable across runs — pass a common box (e.g. derived from
+    the seed designs, as benchmarks/bench_pareto.py does) when tracking
+    hypervolume as a trend metric; the box used is always recorded in
+    ``hv_lo``/``hv_ref``.
+    """
+    if isinstance(graphs, Graph):
+        graphs = [graphs]
+    gstack = Graph.stack(list(graphs))
+    key = jax.random.PRNGKey(key) if isinstance(key, int) else key
+    k_seed, k_mix = jax.random.split(key)
+
+    (tech0, arch0), spec, member_seeds = seed_population(population, seeds, k_seed, sigma)
+    if spec_override is not None:
+        spec = spec_override
+    weights = sample_objective_mixes(population, metrics, k_mix, concentration)
+    ab = jnp.full((population,), jnp.float32(jnp.inf if area_budget is None else area_budget))
+    pb = jnp.full((population,), jnp.float32(jnp.inf if power_budget is None else power_budget))
+    mixes = (weights, ab, pb)
+
+    w0, w1 = penalty_weight
+    pw_schedule = jnp.asarray(np.geomspace(max(w0, 1e-6), max(w1, 1e-6), steps), jnp.float32)
+
+    state = init_population_state(tech0, arch0)
+    rows = []
+    done = 0
+    step_per_dispatch = steps if chunk is None else max(1, chunk)
+    while done < steps:
+        n = min(step_per_dispatch, steps - done)
+        state, m = population_chunk(
+            state, mixes, gstack, lr, pw_schedule[done : done + n],
+            spec=spec, mcfg=mcfg, opt_over=opt_over, mesh=mesh,
+        )
+        rows.append(np.asarray(m))
+        done += n
+    history = np.concatenate(rows, axis=0) if rows else np.zeros((0, population, 5), np.float32)
+
+    tech = from_log(state[0])
+    arch = from_log(state[1])
+    logm, area, power = population_log_metrics(tech, arch, gstack, spec, mcfg)
+    logm, area, power = np.asarray(logm), np.asarray(area), np.asarray(power)
+
+    tol = 1.0 + budget_tol
+    feasible = (area <= np.asarray(ab) * tol) & (power <= np.asarray(pb) * tol)
+    midx = np.asarray([PARETO_METRICS.index(m) for m in metrics])
+    pts = jnp.asarray(logm[:, midx])
+    front_mask = np.asarray(non_dominated_mask(pts, jnp.asarray(feasible)))
+    front = np.nonzero(front_mask)[0]
+
+    if front.size:
+        fpts = pts[jnp.asarray(front)]
+        if hv_box is not None:
+            lo, ref = (jnp.asarray(b, jnp.float32) for b in hv_box)
+        else:
+            feas_pts = pts[jnp.asarray(np.nonzero(feasible)[0])] if feasible.any() else pts
+            ref = hv_ref_point(feas_pts)
+            lo = jnp.minimum(jnp.min(feas_pts, axis=0), ref)
+        hv = float(hypervolume(fpts, ref, lo=lo))
+        hv_lo, hv_ref = np.asarray(lo), np.asarray(ref)
+        front_pts = np.asarray(fpts)
+    else:
+        hv = 0.0
+        hv_lo = hv_ref = np.full(len(metrics), np.nan)
+        front_pts = np.zeros((0, len(metrics)), np.float32)
+
+    winners = []
+    for i in front.tolist():
+        t_i = jax.tree.map(lambda x: x[i], tech)
+        a_i = jax.tree.map(lambda x: x[i], arch)
+        text = serialize_arch(
+            name=f"pareto_{member_seeds[i]}_{i}", spec=spec, arch=a_i, tech=t_i
+        )
+        winners.append(
+            dict(
+                index=i,
+                seed=member_seeds[i],
+                weights={m: float(weights[i, j]) for j, m in enumerate(PARETO_METRICS)},
+                time_s=float(np.exp(logm[i, 0])),
+                energy_j=float(np.exp(logm[i, 1])),
+                area_mm2=float(area[i]),
+                power_w=float(power[i]),
+                edp=float(np.exp(logm[i, 3])),
+                dhd=text,
+            )
+        )
+
+    return ParetoResult(
+        tech=tech,
+        arch=arch,
+        spec=spec,
+        seeds=member_seeds,
+        weights=np.asarray(weights),
+        area_budget=np.asarray(ab),
+        power_budget=np.asarray(pb),
+        history=history,
+        log_metrics=logm,
+        area=area,
+        power=power,
+        feasible=feasible,
+        front=front,
+        front_log_metrics=front_pts,
+        hypervolume=hv,
+        hv_lo=hv_lo,
+        hv_ref=hv_ref,
+        winners=winners,
+    )
+
+
+# --------------------------------------------------------------------------- #
+# legacy single-objective population helpers (pjit-able dry-run DSE step)
+# --------------------------------------------------------------------------- #
 
 
 def init_population(key: jax.Array, n: int, sigma: float = 0.3):

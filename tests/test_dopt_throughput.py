@@ -1,0 +1,43 @@
+"""Regression guard for PR 2's device-resident DOpt throughput win.
+
+The fused chunked-scan loop is what makes population-scale DSE viable; a
+refactor that silently unfuses it (per-epoch host syncs, per-call
+retracing) would pass every correctness test and only show up in the
+benches.  This tier-1 test re-measures warm fused epochs/sec on the same
+3-workload stack the recorded baseline used and asserts it stays within a
+*generous* factor of ``results/bench/dopt_throughput.json`` — wide enough
+for slow CI machines, tight enough that losing the fusion (a >20x cliff on
+the recorded hardware) fails loudly.
+"""
+import json
+import os
+import time
+
+from repro.core import optimize
+from repro.workloads import get_workload
+
+BASELINE = os.path.join(
+    os.path.dirname(__file__), "..", "results", "bench", "dopt_throughput.json"
+)
+GENEROUS_FACTOR = 20.0  # machine-variance headroom below the recorded rate
+
+
+def test_warm_fused_epochs_per_sec_vs_recorded_baseline():
+    with open(BASELINE) as f:
+        recorded = json.load(f)
+    recorded_eps = float(recorded["after"]["epochs_per_s_warm"])
+    assert recorded_eps > 0, recorded
+
+    gl = [get_workload(n) for n in recorded["workloads"]]
+    steps = 40
+    optimize(gl, objective="edp", steps=steps, lr=0.05, fused=True)  # compile
+    t0 = time.perf_counter()
+    optimize(gl, objective="edp", steps=steps, lr=0.05, fused=True)
+    warm_eps = steps / (time.perf_counter() - t0)
+
+    floor = recorded_eps / GENEROUS_FACTOR
+    assert warm_eps >= floor, (
+        f"warm fused DOpt throughput {warm_eps:.0f} epochs/s fell below "
+        f"{floor:.0f} (recorded {recorded_eps:.0f} / factor {GENEROUS_FACTOR}) — "
+        f"did a refactor unfuse the device-resident loop?"
+    )

@@ -1,0 +1,176 @@
+"""core.pareto: non-dominated filtering + hypervolume invariants.
+
+Property tests (hypothesis, degrading to skips without it via
+_hypothesis_compat) pin the three contract invariants the DSE driver
+relies on:
+
+  1. the extracted front is *mutually* non-dominated;
+  2. every dropped point is dominated by some *front* member (not merely
+     by another dropped point — domination chains must terminate on the
+     front);
+  3. hypervolume is monotone under adding points (with the shared
+     sample-box convention for the Monte-Carlo estimator), and invariant
+     under adding dominated points for the exact 2-objective sweep.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro.core.pareto import (
+    dominates,
+    hv_ref_point,
+    hypervolume,
+    non_dominated_mask,
+    pareto_front,
+)
+
+
+def _points(seed: int, n: int, m: int) -> np.ndarray:
+    """Deterministic random cost points with duplicates + dominated rows."""
+    rng = np.random.default_rng(seed)
+    pts = rng.uniform(-3.0, 3.0, size=(n, m)).astype(np.float32)
+    if n >= 4:
+        pts[n // 2] = pts[0]  # exact duplicate
+        pts[-1] = pts[1] + 0.5  # strictly dominated by row 1
+    return pts
+
+
+# --------------------------------------------------------------------------- #
+# example-based anchors
+# --------------------------------------------------------------------------- #
+
+
+class TestExamples:
+    def test_domination_matrix(self):
+        a = jnp.array([1.0, 1.0])
+        b = jnp.array([2.0, 1.0])
+        assert bool(dominates(a, b)) and not bool(dominates(b, a))
+        assert not bool(dominates(a, a))  # never self-dominating
+
+    def test_front_mask_known(self):
+        pts = jnp.array([[1.0, 3.0], [2.0, 1.0], [1.5, 2.5], [3.0, 3.0]])
+        np.testing.assert_array_equal(
+            np.asarray(non_dominated_mask(pts)), [True, True, True, False]
+        )
+        np.testing.assert_array_equal(pareto_front(pts), [0, 1, 2])
+
+    def test_hypervolume_2d_staircase(self):
+        # union of [1,4]x[3,4] and [2,4]x[1,4]: 3 + 6 - 2 = 7
+        pts = jnp.array([[1.0, 3.0], [2.0, 1.0]])
+        assert float(hypervolume(pts, jnp.array([4.0, 4.0]))) == pytest.approx(7.0)
+
+    def test_hypervolume_2d_clip_beyond_ref(self):
+        # a point beyond ref on one axis dominates only a measure-zero slice
+        pts = jnp.array([[1.0, 3.0], [5.0, 0.0]])
+        assert float(hypervolume(pts, jnp.array([4.0, 4.0]))) == pytest.approx(3.0)
+
+    def test_hypervolume_3d_single_point_exact_box(self):
+        ref = jnp.array([1.0, 2.0, 3.0])
+        got = hypervolume(jnp.array([[0.0, 0.0, 0.0]]), ref, lo=jnp.zeros(3))
+        assert float(got) == pytest.approx(6.0, rel=0.05)
+
+    def test_infeasible_neither_fronts_nor_shadows(self):
+        pts = jnp.array([[0.0, 0.0], [1.0, 1.0]])  # 0 dominates 1
+        feas = jnp.array([False, True])
+        np.testing.assert_array_equal(
+            np.asarray(non_dominated_mask(pts, feas)), [False, True]
+        )
+
+    def test_hv_ref_point_strictly_beyond(self):
+        pts = _points(0, 12, 3)
+        ref = np.asarray(hv_ref_point(pts))
+        assert np.all(ref > pts.max(axis=0))
+
+
+# --------------------------------------------------------------------------- #
+# properties
+# --------------------------------------------------------------------------- #
+
+
+class TestFrontProperties:
+    @settings(max_examples=40, deadline=None)
+    @given(st.integers(0, 10**6), st.integers(2, 40), st.integers(2, 4))
+    def test_front_is_mutually_non_dominated(self, seed, n, m):
+        pts = _points(seed, n, m)
+        idx = pareto_front(pts)
+        assert idx.size >= 1
+        sub = pts[idx]
+        dom = np.asarray(dominates(jnp.asarray(sub)[:, None], jnp.asarray(sub)[None, :]))
+        assert not dom.any()
+
+    @settings(max_examples=40, deadline=None)
+    @given(st.integers(0, 10**6), st.integers(2, 40), st.integers(2, 4))
+    def test_every_dropped_point_dominated_by_a_front_member(self, seed, n, m):
+        pts = _points(seed, n, m)
+        mask = np.asarray(non_dominated_mask(jnp.asarray(pts)))
+        front = pts[mask]
+        for p in pts[~mask]:
+            dom = np.asarray(dominates(jnp.asarray(front), jnp.asarray(p)[None]))
+            assert dom.any(), f"dropped point {p} not dominated by any front member"
+
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(0, 10**6), st.integers(2, 16))
+    def test_duplicates_survive_together(self, seed, n):
+        pts = _points(seed, max(n, 4), 3)
+        mask = np.asarray(non_dominated_mask(jnp.asarray(pts)))
+        # row n//2 is an exact duplicate of row 0: identical fate
+        assert mask[0] == mask[len(pts) // 2]
+
+
+class TestHypervolumeProperties:
+    @settings(max_examples=40, deadline=None)
+    @given(st.integers(0, 10**6), st.integers(2, 20))
+    def test_exact_2d_monotone_under_adding_point(self, seed, n):
+        pts = _points(seed, n, 2)
+        rng = np.random.default_rng(seed + 1)
+        extra = rng.uniform(-3.0, 3.0, size=(1, 2)).astype(np.float32)
+        ref = jnp.asarray(np.maximum(pts.max(0), extra.max(0)) + 0.5)
+        hv0 = float(hypervolume(jnp.asarray(pts), ref))
+        hv1 = float(hypervolume(jnp.asarray(np.concatenate([pts, extra])), ref))
+        assert hv1 >= hv0 - 1e-5
+
+    @settings(max_examples=40, deadline=None)
+    @given(st.integers(0, 10**6), st.integers(2, 20))
+    def test_exact_2d_invariant_under_adding_dominated_point(self, seed, n):
+        pts = _points(seed, n, 2)
+        ref = jnp.asarray(pts.max(0) + 0.5)
+        dominated = (pts[0] + 0.25)[None]  # strictly worse than row 0
+        hv0 = float(hypervolume(jnp.asarray(pts), ref))
+        hv1 = float(hypervolume(jnp.asarray(np.concatenate([pts, dominated])), ref))
+        assert hv1 == pytest.approx(hv0, rel=1e-5, abs=1e-5)
+
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(0, 10**6), st.integers(2, 16), st.integers(3, 4))
+    def test_mc_monotone_with_shared_box(self, seed, n, m):
+        """With a common (lo, ref, key) sample box, the quasi-MC estimate is
+        exactly monotone: the dominated-sample set can only grow."""
+        pts = _points(seed, n, m)
+        rng = np.random.default_rng(seed + 2)
+        extra = rng.uniform(-3.0, 3.0, size=(1, m)).astype(np.float32)
+        allp = np.concatenate([pts, extra])
+        lo = jnp.asarray(allp.min(0) - 0.1)
+        ref = jnp.asarray(allp.max(0) + 0.5)
+        key = jax.random.PRNGKey(seed % 2**30)
+        hv0 = float(hypervolume(jnp.asarray(pts), ref, lo=lo, key=key, n_samples=2048))
+        hv1 = float(hypervolume(jnp.asarray(allp), ref, lo=lo, key=key, n_samples=2048))
+        assert hv1 >= hv0
+
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(0, 10**6), st.integers(2, 16))
+    def test_mc_bounded_by_box_volume(self, seed, n):
+        pts = _points(seed, n, 3)
+        lo = jnp.asarray(pts.min(0) - 0.1)
+        ref = jnp.asarray(pts.max(0) + 0.5)
+        hv = float(hypervolume(jnp.asarray(pts), ref, lo=lo, n_samples=1024))
+        box = float(np.prod(np.asarray(ref) - np.asarray(lo)))
+        assert 0.0 <= hv <= box + 1e-5
+
+    def test_mc_agrees_with_exact_on_separable_3d(self):
+        # one point: dominated volume is a box — MC must land close
+        ref = jnp.array([2.0, 2.0, 2.0])
+        pt = jnp.array([[0.5, 1.0, 0.0]])
+        exact = 1.5 * 1.0 * 2.0
+        got = float(hypervolume(pt, ref, lo=jnp.zeros(3) - 0.0, n_samples=32768))
+        assert got == pytest.approx(exact, rel=0.05)

@@ -1,4 +1,8 @@
-"""Dev tool: run a reduced-config forward+loss+prefill+decode for all archs."""
+"""Dev tool: run a reduced-config forward+loss+prefill+decode for all archs,
+then smoke the examples' Pareto-DSE path (optimize_hw.pareto_frontier) at toy
+scale.  ``--skip-dse`` runs the model matrix only."""
+import importlib.util
+import os
 import sys
 
 import jax
@@ -8,6 +12,22 @@ import numpy as np
 sys.path.insert(0, "src")
 from repro.configs import all_archs, get_config
 from repro.models import build_model
+
+
+def smoke_pareto_example():
+    """Exercise examples/optimize_hw.py's frontier path on a tiny workload:
+    population DSE must produce a non-empty, feasible, serialized front."""
+    path = os.path.join(os.path.dirname(__file__), "..", "examples", "optimize_hw.py")
+    spec = importlib.util.spec_from_file_location("optimize_hw", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    from repro.workloads import get_workload
+
+    res = mod.pareto_frontier(get_workload("lstm"), population=6, steps=3)
+    assert res.front.size >= 1, "empty Pareto front"
+    assert res.feasible[res.front].all(), "front member violates budget"
+    assert all(w["dhd"].startswith("arch ") for w in res.winners)
+    print(f"pareto example: front {res.front.size}/6, hv {res.hypervolume:.2f}  OK")
 
 
 def batch_for(cfg, B=2, S=16):
@@ -40,6 +60,8 @@ def main():
             logits2, cache = m.decode_step(params, tok, cache)
             assert jnp.isfinite(logits2).all(), arch
         print(f"{arch:28s} loss={float(loss):.4f}  params={m.param_count():,}  OK")
+    if "--skip-dse" not in sys.argv:
+        smoke_pareto_example()
 
 
 if __name__ == "__main__":
