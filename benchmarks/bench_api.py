@@ -1,0 +1,106 @@
+"""Façade cache probe: the serving guarantee, measured and gated.
+
+``Session`` keys compiled programs by (spec, mapper config, workload shape
+bucket, objective signature); the serving pattern — repeated queries over
+same-bucket workloads — must replay cached executables.  This bench records
+to ``results/bench/api_cache.json`` (``--quick`` -> ``api_cache_quick.json``):
+
+  * **cold** — first ``simulate()`` on a fresh Session (traces + compiles);
+  * **warm** — repeated ``simulate()`` over same-bucket workloads (the
+    original, a different workload, a different design point), each timed;
+  * **optimize warm-over-mixes** — two ``optimize(objective="mixed")``
+    calls with different weights/budgets: the second must add zero DOpt-step
+    traces (weights are traced arguments, per PR 4).
+
+Acceptance gates (hard-fail, both modes):
+  * zero new traces across the whole warm phase;
+  * warm mean wall >= MIN_SPEEDUP x lower than cold.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, save_json, timed
+from repro.api import Architecture, Session, Workload
+from repro.core import instrument
+
+MIN_SPEEDUP = 10.0
+# one 32-vertex shape bucket, four distinct workloads
+BUCKET_FAMILY = ["lstm", "merge_sort", "dlrm", "gcn"]
+
+
+def run(quick: bool = False) -> dict:
+    sess = Session("base")
+    wls = {n: Workload(n) for n in BUCKET_FAMILY}
+    assert len({w.bucket for w in wls.values()}) == 1, "probe family must share a bucket"
+
+    # --- cold: first query compiles ---------------------------------------
+    _, cold_s = timed(sess.simulate, wls["lstm"])
+    cold_traces = sess.stats.traces
+
+    # --- warm: same bucket — same workload, new workloads, new design -----
+    reps = 3 if quick else 10
+    warm_walls = []
+    edge = Architecture("edge")
+    t_before = sess.stats.traces
+    for _ in range(reps):
+        for name in BUCKET_FAMILY:
+            warm_walls.append(timed(sess.simulate, wls[name])[1])
+        # a new design point is traced params, not a new program
+        warm_walls.append(timed(sess.simulate, wls["lstm"], architecture=edge)[1])
+    warm_retraces = sess.stats.traces - t_before
+    warm_mean = float(np.mean(warm_walls))
+    speedup = cold_s / max(warm_mean, 1e-9)
+
+    # --- optimize: a changed objective mix must reuse the program ---------
+    steps = 4 if quick else 16
+    sess.optimize(wls["lstm"], objective="mixed",
+                  objective_weights=[1.0, 0.0, 0.0, 0.0], steps=steps, report=False)
+    d0 = instrument.trace_count("dopt._dopt_step")
+    _, opt_warm_s = timed(
+        sess.optimize, wls["merge_sort"], objective="mixed",
+        objective_weights=[0.0, 0.5, 0.5, 0.0], area_budget=900.0,
+        steps=steps, report=False)
+    opt_retraces = instrument.trace_count("dopt._dopt_step") - d0
+
+    st = sess.stats
+    summary = dict(
+        bucket_family=BUCKET_FAMILY,
+        bucket=list(wls["lstm"].bucket),
+        cold_s=round(cold_s, 4),
+        cold_traces=cold_traces,
+        warm_calls=len(warm_walls),
+        warm_mean_s=round(warm_mean, 5),
+        warm_p50_s=round(float(np.median(warm_walls)), 5),
+        warm_max_s=round(float(np.max(warm_walls)), 5),
+        warm_retraces=int(warm_retraces),
+        speedup_cold_over_warm=round(speedup, 1),
+        optimize_mix_change_retraces=int(opt_retraces),
+        optimize_warm_s=round(opt_warm_s, 4),
+        session=dict(programs=st.programs, hits=st.hits, misses=st.misses, traces=st.traces),
+    )
+    emit("api_cache", dict(cold_s=summary["cold_s"], warm_mean_s=summary["warm_mean_s"],
+                           speedup=summary["speedup_cold_over_warm"],
+                           warm_retraces=summary["warm_retraces"]))
+
+    checks = []
+    if warm_retraces != 0:
+        checks.append(f"warm same-bucket simulate retraced {warm_retraces}x")
+    if opt_retraces != 0:
+        checks.append(f"changed objective mix retraced the DOpt step {opt_retraces}x")
+    if speedup < MIN_SPEEDUP:
+        checks.append(f"warm speedup {speedup:.1f} < {MIN_SPEEDUP}")
+    summary["checks_failed"] = checks
+
+    save_json("api_cache", summary, quick=quick)
+    if checks:
+        raise SystemExit(f"bench_api acceptance checks failed: {checks}")
+    return summary
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    run(quick=ap.parse_args().quick)

@@ -2,7 +2,8 @@
 optimized accelerator architecture per workload by gradient descent, with
 the convergence curve recorded (single-pass, seconds — vs sweep hours).
 
-Starting points are named text architectures from the `.dhd` library
+Runs through the Session façade (the dopt engine underneath is unchanged);
+starting points are named text architectures from the `.dhd` library
 (``--arch``, default ``base`` — identical to the old dataclass defaults),
 and a library sweep optimizes the same workload from several described
 designs to show DSE launching straight from ``.dhd`` files."""
@@ -10,20 +11,22 @@ from __future__ import annotations
 
 import time
 
-import numpy as np
-
 from benchmarks.common import emit, save_json
-from repro.core import ArchParams, TechParams, load_arch, optimize, simulate
-from repro.core.mapper import MapperCfg
-from repro.workloads import get_workload, lm_cell
+from repro.api import Architecture, MapperCfg, Session, Workload
 
 WORKLOADS = {
-    "resnet50": lambda: get_workload("resnet50"),
-    "bert_base": lambda: get_workload("bert_base"),
-    "dlrm": lambda: get_workload("dlrm"),
-    "qwen2.5-32b:train": lambda: lm_cell("qwen2.5-32b", "train_4k"),
-    "falcon-mamba:decode": lambda: lm_cell("falcon-mamba-7b", "decode_32k"),
+    "resnet50": lambda: Workload("resnet50"),
+    "bert_base": lambda: Workload("bert_base"),
+    "dlrm": lambda: Workload("dlrm"),
+    "qwen2.5-32b:train": lambda: _lm("qwen2.5-32b", "train_4k"),
+    "falcon-mamba:decode": lambda: _lm("falcon-mamba-7b", "decode_32k"),
 }
+
+
+def _lm(arch: str, shape: str) -> Workload:
+    from repro.workloads import lm_cell
+
+    return Workload(lm_cell(arch, shape), labels=(f"{arch}:{shape}",))
 
 
 def dopt_throughput(quick: bool = False) -> dict:
@@ -38,19 +41,21 @@ def dopt_throughput(quick: bool = False) -> dict:
     mapper (the defaults).  Walls are reported cold (includes compile) and warm
     (compiled program cached across optimize() calls — the fleet steady
     state the fused path enables and the per-call-closure baseline cannot).
+    Both run ``report=False``: only the descent is on the clock.
     """
     steps = 40 if quick else 200
     names = ["lstm", "bert_base", "merge_sort"]
-    gs = [get_workload(n) for n in names]
+    wl = Workload(names)
+    sess = Session("base")
 
     def measure(label, **kw):
         t0 = time.perf_counter()
-        optimize(gs, objective="edp", steps=steps, lr=0.05, **kw)
+        sess.optimize(wl, objective="edp", steps=steps, lr=0.05, report=False, **kw)
         cold = time.perf_counter() - t0
         t0 = time.perf_counter()
-        optimize(gs, objective="edp", steps=steps, lr=0.05, **kw)
+        sess.optimize(wl, objective="edp", steps=steps, lr=0.05, report=False, **kw)
         warm = time.perf_counter() - t0
-        row = dict(variant=label, steps=steps, workloads=len(gs),
+        row = dict(variant=label, steps=steps, workloads=wl.n_workloads,
                    wall_cold_s=round(cold, 3), wall_warm_s=round(warm, 3),
                    epochs_per_s_warm=round(steps / warm, 1))
         emit("dopt_throughput", row)
@@ -68,44 +73,43 @@ def dopt_throughput(quick: bool = False) -> dict:
     return summary
 
 
-def _describe(a: ArchParams) -> dict:
+def _describe(a: Architecture) -> dict:
+    p = a.arch
     return dict(
-        sys_arr=f"{float(a.sys_arr_x):.0f}x{float(a.sys_arr_y):.0f}x{float(a.sys_arr_n):.0f}",
-        vect=f"{float(a.vect_width):.0f}x{float(a.vect_n):.0f}",
-        gbuf_mb=round(float(a.capacity[1]) / 2**20, 1),
-        freq_ghz=round(float(a.frequency) / 1e9, 2),
+        sys_arr=f"{float(p.sys_arr_x):.0f}x{float(p.sys_arr_y):.0f}x{float(p.sys_arr_n):.0f}",
+        vect=f"{float(p.vect_width):.0f}x{float(p.vect_n):.0f}",
+        gbuf_mb=round(float(p.capacity[1]) / 2**20, 1),
+        freq_ghz=round(float(p.frequency) / 1e9, 2),
     )
 
 
 def run(quick: bool = False, start_arch: str = "base") -> dict:
-    start = load_arch(start_arch)  # named .dhd text architecture
+    sess = Session(Architecture(start_arch))  # named .dhd text architecture
     out = {"dopt_throughput": dopt_throughput(quick), "start_arch": start_arch}
     steps = 20 if quick else 60
     items = list(WORKLOADS.items())[:3] if quick else list(WORKLOADS.items())
     for name, make in items:
-        g = make()
+        wl = make()
         t0 = time.perf_counter()
-        res = optimize(g, tech=start.tech, arch=start.arch, spec=start.spec,
-                       objective="edp", opt_over="arch", steps=steps, lr=0.1)
+        res = sess.optimize(wl, objective="edp", opt_over="arch", steps=steps,
+                            lr=0.1, report=False)
         wall = time.perf_counter() - t0
-        gain = res.history["edp"][0] / max(res.history["edp"][-1], 1e-300)
-        row = dict(workload=name, edp_gain=round(gain, 1), wall_s=round(wall, 1),
-                   epochs=len(res.history["edp"]), **_describe(res.arch))
-        out[name] = dict(row=row, curve=res.history["edp"][:: max(1, steps // 20)])
+        row = dict(workload=name, edp_gain=round(res.improvement, 1), wall_s=round(wall, 1),
+                   epochs=res.epochs, **_describe(Architecture(res.to_dhd())))
+        curve = list(res.objective_history[:: max(1, steps // 20)])
+        out[name] = dict(row=row, curve=curve)
         emit("dse", row)
 
     # DSE launched from several *described* designs: same workload, library
     # starting points — how much each hand-written architecture leaves on
     # the table relative to its own optimum
     out["library_starts"] = {}
+    wl = Workload("bert_base")
     for lib_name in ["edge", "datacenter"] if quick else ["edge", "mobile", "datacenter", "hbm_class"]:
-        ca = load_arch(lib_name)
-        g = get_workload("bert_base")
-        res = optimize(g, tech=ca.tech, arch=ca.arch, spec=ca.spec,
-                       objective="edp", opt_over="arch", steps=steps, lr=0.1)
-        gain = res.history["edp"][0] / max(res.history["edp"][-1], 1e-300)
-        row = dict(start=lib_name, workload="bert_base", edp_gain=round(gain, 1),
-                   **_describe(res.arch))
+        res = sess.optimize(wl, objective="edp", opt_over="arch", steps=steps, lr=0.1,
+                            architecture=Architecture(lib_name), report=False)
+        row = dict(start=lib_name, workload="bert_base", edp_gain=round(res.improvement, 1),
+                   **_describe(Architecture(res.to_dhd())))
         out["library_starts"][lib_name] = row
         emit("dse", row)
     save_json("dse", out, quick=quick)

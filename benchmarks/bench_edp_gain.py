@@ -1,7 +1,8 @@
 """Abstract claim: 'architectures and circuits 5x better than previously
 published works [Scale-Sim; Interstellar]'.
 
-Baselines = fixed published-style design points evaluated by DSim:
+Baselines = fixed published-style design points evaluated by DSim (through
+the Session façade):
   * scale-sim-like: 32x32 systolic array, 256KB double-buffered SRAM, 1 GHz
   * interstellar-like (Eyeriss-class): 16x16 PEs, 108KB buffer
   * tpu-v1-like: 256x256 MACs, 24MB unified buffer
@@ -11,12 +12,12 @@ each baseline's EDP by >= the paper's 5x on the shared workload set."""
 from __future__ import annotations
 
 import dataclasses
+import math
 
 import jax.numpy as jnp
 
 from benchmarks.common import emit, save_json
-from repro.core import ArchParams, TechParams, optimize, simulate
-from repro.workloads import get_workload
+from repro.api import ArchParams, Architecture, Session, Workload
 
 BASELINES = {
     "scale-sim-32x32": dict(sys_arr_x=32.0, sys_arr_y=32.0, sys_arr_n=1.0,
@@ -32,42 +33,42 @@ BASELINES = {
 WORKLOADS = ("resnet50", "bert_base", "lstm")
 
 
-def _arch_from(d: dict) -> ArchParams:
+def _arch_from(name: str, d: dict) -> Architecture:
     base = ArchParams.default()
     kw = {k: (jnp.asarray(v, jnp.float32) if isinstance(v, list) else jnp.float32(v))
           for k, v in d.items()}
-    return dataclasses.replace(base, **kw)
+    return Architecture(arch=dataclasses.replace(base, **kw), name=name)
 
 
 def run(quick: bool = False) -> dict:
-    tech = TechParams.default()
+    sess = Session("base")
     out = {}
     workloads = WORKLOADS[:2] if quick else WORKLOADS
-    graphs = [get_workload(w) for w in workloads]
-    n = len(graphs)
-    for name, spec in BASELINES.items():
-        arch0 = _arch_from(spec)
-        base_edp = 1.0
-        for g in graphs:
-            base_edp *= float(simulate(tech, arch0, g).edp)
-        base_area = float(simulate(tech, arch0, graphs[0]).area)
+    wl = Workload(list(workloads))
+    n = wl.n_workloads
 
-        def geo_edp(t, a):
-            e = 1.0
-            for g in graphs:
-                e *= float(simulate(t, a, g).edp)
-            return e
+    def geo_edp(architecture: Architecture) -> float:
+        rep = sess.simulate(wl, architecture=architecture)
+        return math.prod(w.edp for w in rep.workloads)
+
+    for name, point in BASELINES.items():
+        arch0 = _arch_from(name, point)
+        rep0 = sess.simulate(wl, architecture=arch0)
+        base_edp = math.prod(w.edp for w in rep0.workloads)
+        base_area = rep0.area_mm2
 
         # (a) SAME technology (40nm reference), architecture-only — the
         # apples-to-apples "5x better architectures" claim
-        res_a = optimize(graphs, arch=arch0, opt_over="arch", objective="edp",
-                         steps=15 if quick else 60, lr=0.1, area_constraint=base_area)
-        gain_arch = (base_edp / max(geo_edp(TechParams.default(), res_a.arch), 1e-300)) ** (1 / n)
+        res_a = sess.optimize(wl, architecture=arch0, opt_over="arch", objective="edp",
+                              steps=15 if quick else 60, lr=0.1,
+                              area_constraint=base_area, report=False)
+        gain_arch = (base_edp / max(geo_edp(Architecture(res_a.to_dhd())), 1e-300)) ** (1 / n)
         # (b) joint arch+technology — the "100x/1000x with technology
         # targets" headroom claim
-        res_b = optimize(graphs, arch=arch0, opt_over="both", objective="edp",
-                         steps=15 if quick else 60, lr=0.1, area_constraint=base_area)
-        gain_joint = (base_edp / max(geo_edp(res_b.tech, res_b.arch), 1e-300)) ** (1 / n)
+        res_b = sess.optimize(wl, architecture=arch0, opt_over="both", objective="edp",
+                              steps=15 if quick else 60, lr=0.1,
+                              area_constraint=base_area, report=False)
+        gain_joint = (base_edp / max(geo_edp(Architecture(res_b.to_dhd())), 1e-300)) ** (1 / n)
 
         row = dict(baseline=name,
                    edp_gain_same_tech=round(gain_arch, 1),

@@ -1,14 +1,27 @@
 """Paper §8.1 / Fig. 4 / Table 1: simulator speed + accuracy.
 
-DSim (closed-form vectorized vertex scan, jit) vs the reference per-tile
-cycle-walker (refsim.py — our stand-in for SCALE-Sim/Timeloop-class tools,
-same per-tile-stepping asymptotics). Reported per workload:
+DSim — served through the Session façade's cached compiled program, the
+production query path — vs the reference per-tile cycle-walker (refsim.py,
+our stand-in for SCALE-Sim/Timeloop-class tools, same per-tile-stepping
+asymptotics).  The refsim/kernel comparisons reach past the façade by
+design (tagged ``# engine-oracle`` for the API-surface lint): they ARE the
+accuracy/speed oracle the façade path is measured against.  Reported per
+workload:
 
   * accuracy  = 1 - |cycles_dsim - cycles_ref| / cycles_ref  (paper: 80-97%)
   * speedup   = wall_ref / wall_dsim                          (paper: ~1000x)
 
 plus the popsim Pallas kernel evaluating a 512-candidate population, which
 is the per-candidate cost DOpt's DSE pays.
+
+Dispatch note: the façade buckets every workload to >= 32 vertices, so the
+mapper's auto dispatch always takes the associative formulation — on CPU
+that puts a flat ~0.2-0.4 ms fan-out floor under *forward-only* dispatch
+of small graphs (the formulation optimizes the DOpt/DSE gradient path,
+where it is 5-16x faster; see ROADMAP "Mapper: associative-scan
+formulation").  Forward-heavy deployments can force
+``Session(mcfg=MapperCfg(scan_impl="ref"))``; this bench records the
+serving *default*, with the padded size in each row's ``bucket`` column.
 """
 from __future__ import annotations
 
@@ -20,9 +33,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit, save_json
-from repro.core import ArchParams, TechParams, simulate_chw, specialize
-from repro.core.refsim import reference_simulate
-from repro.kernels import pack_chw, pack_graph, popsim
+from repro.api import ArchParams, Session, TechParams, Workload
+from repro.core.dgen import specialize  # engine-oracle: refsim consumes a raw CHW
+from repro.core.refsim import reference_simulate  # engine-oracle: accuracy baseline
+from repro.kernels import pack_chw, pack_graph, popsim  # engine-oracle: kernel microbench
 from repro.workloads import get_workload, lm_cell
 
 CLASSIC = ["resnet50", "vgg16", "lstm", "dlrm", "bert_base", "bert_large",
@@ -33,6 +47,7 @@ LM = [("qwen2.5-32b", "prefill_32k"), ("granite-3-8b", "train_4k"),
 
 
 def run(quick: bool = False) -> dict:
+    sess = Session("base")  # bit-identical to the dataclass defaults
     chw = specialize(TechParams.default(), ArchParams.default())
     rows = []
     names = CLASSIC[:4] if quick else CLASSIC
@@ -40,17 +55,19 @@ def run(quick: bool = False) -> dict:
     graphs = [(n, get_workload(n)) for n in names]
     graphs += [(f"{a}:{s}", lm_cell(a, s)) for a, s in lms]
 
-    sim = jax.jit(lambda g: simulate_chw(chw, g).cycles)
     for name, g in graphs:
+        wl = Workload(g, labels=(name,))
         # compile timed separately; steady-state iterations sync with
-        # block_until_ready (no scalar device->host transfer in the loop)
+        # block_until_ready (no scalar device->host transfer in the loop).
+        # sess.perf is the cached-program serving path: same-bucket repeats
+        # dispatch the compiled executable directly.
         t0 = time.perf_counter()
-        out = jax.block_until_ready(sim(g))
+        out = jax.block_until_ready(sess.perf(wl).cycles)
         t_compile = time.perf_counter() - t0
-        cyc = float(out)
+        cyc = float(out[0])
         t0 = time.perf_counter()
         for _ in range(5):
-            jax.block_until_ready(sim(g))
+            jax.block_until_ready(sess.perf(wl).cycles)
         t_dsim = (time.perf_counter() - t0) / 5
 
         t0 = time.perf_counter()
@@ -59,6 +76,7 @@ def run(quick: bool = False) -> dict:
 
         acc = 1.0 - abs(cyc - ref["cycles"]) / max(ref["cycles"], 1.0)
         rows.append(dict(workload=name, vertices=g.n_vertices,
+                         bucket=wl.bucket[1],
                          cycles_dsim=cyc, cycles_ref=ref["cycles"],
                          accuracy=round(acc, 4),
                          t_dsim_ms=round(t_dsim * 1e3, 3),

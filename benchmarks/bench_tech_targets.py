@@ -6,36 +6,38 @@
 (b) Fig. 3 — technology targets for a 100x EDP improvement of a BERT-class
     encoder, derived in ONE gradient pass (seconds), with the achieved
     factor and the ranked order in which parameters must improve.
+
+All through the Session façade (tech_targets/optimize route to dopt).
 """
 from __future__ import annotations
 
 import time
 
 from benchmarks.common import emit, save_json
-from repro.core import optimize
-from repro.core.dopt import derive_tech_targets
-from repro.workloads import WORKLOAD_FAMILIES, get_workload
+from repro.api import Session, Workload
+from repro.workloads import WORKLOAD_FAMILIES
 
 
 def run(quick: bool = False) -> dict:
+    sess = Session("base")
     out = {"table3": {}, "targets_100x": None}
     steps = 10 if quick else 25
     for family, names in WORKLOAD_FAMILIES.items():
         if family == "non_ai":
             continue
-        graphs = [get_workload(n) for n in (names[:1] if quick else names)]
+        wl = Workload(list(names[:1] if quick else names))
         for objective in ("time", "energy"):
-            res = optimize(graphs, opt_over="tech", objective=objective,
-                           steps=steps, lr=0.05)
-            top = [n for n, _ in res.importance[:5]]
+            res = sess.optimize(wl, opt_over="tech", objective=objective,
+                                steps=steps, lr=0.05, report=False)
+            top = [a.parameter.removeprefix("tech.") for a in res.importance[:5]]
             out["table3"][f"{family}/{objective}"] = top
             emit("tech_targets", dict(family=family, objective=objective,
                                       order=" > ".join(top[:4])))
 
     # 100x EDP derivation for BERT (paper Fig. 3)
     t0 = time.perf_counter()
-    tt = derive_tech_targets(get_workload("bert_base"), goal_factor=100.0,
-                             objective="edp", steps=80 if quick else 400, lr=0.12)
+    tt = sess.tech_targets(Workload("bert_base"), goal_factor=100.0,
+                           objective="edp", steps=80 if quick else 400, lr=0.12)
     wall = time.perf_counter() - t0
     moved = sorted(tt["targets"].items(), key=lambda kv: -abs(kv[1]["factor"] - 1))
     top_moves = {k: round(v["factor"], 2) for k, v in moved[:6]}
@@ -50,12 +52,13 @@ def run(quick: bool = False) -> dict:
         # pure-technology improvement saturates at the library's physical
         # bounds (~86x); the paper's 100x needs the architecture co-designed
         # (its framework does both) — report the joint path too
-        res = optimize(get_workload("bert_base"), opt_over="both", objective="edp",
-                       steps=30 if quick else 80, lr=0.1, target_factor=100.0)
-        joint = res.history["edp"][0] / max(res.history["edp"][-1], 1e-300)
-        out["targets_100x"]["joint_arch_tech_achieved"] = round(joint, 1)
-        emit("tech_targets", dict(goal="100x_edp_bert_joint", achieved=round(joint, 1),
-                                  epochs=len(res.history["edp"])))
+        res = sess.optimize(Workload("bert_base"), opt_over="both", objective="edp",
+                            steps=30 if quick else 80, lr=0.1, target_factor=100.0,
+                            report=False)
+        out["targets_100x"]["joint_arch_tech_achieved"] = round(res.improvement, 1)
+        emit("tech_targets", dict(goal="100x_edp_bert_joint",
+                                  achieved=round(res.improvement, 1),
+                                  epochs=res.epochs))
     save_json("tech_targets", out, quick=quick)
     return out
 

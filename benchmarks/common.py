@@ -37,3 +37,11 @@ def timer():
     t0 = time.perf_counter()
     yield t
     t["s"] = time.perf_counter() - t0
+
+
+def timed(fn, *args, **kw):
+    """``(result, wall_seconds)`` of one call — the cold/warm timing idiom
+    the façade benches repeat."""
+    t0 = time.perf_counter()
+    out = fn(*args, **kw)
+    return out, time.perf_counter() - t0

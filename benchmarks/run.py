@@ -10,6 +10,7 @@
 | edp_gain      | abstract (5x vs published baselines)          |
 | roofline      | EXPERIMENTS.md §Roofline (from the dry-run)   |
 | pareto        | constrained latency/energy/area frontier (population DSE) |
+| api           | Session compiled-program cache (cold/warm, zero-retrace gates) |
 """
 from __future__ import annotations
 
@@ -25,6 +26,7 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (
+        bench_api,
         bench_dse,
         bench_edp_gain,
         bench_pareto,
@@ -42,6 +44,7 @@ def main() -> None:
         "roofline": bench_roofline.run,
         "serving": bench_serving.run,
         "pareto": bench_pareto.run,
+        "api": bench_api.run,
     }
     names = args.only.split(",") if args.only else list(table)
     failures = []

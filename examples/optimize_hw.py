@@ -1,7 +1,8 @@
-"""DRAGON applied to the assigned LM fleet: derive technology targets and an
-accelerator design for serving qwen2.5-32b, compare architectures'
-hardware pressure (which arch wants which technology), and map the
-constrained latency/energy/area frontier for the serving cell.
+"""DRAGON applied to the assigned LM fleet, through the Session façade:
+derive technology targets and an accelerator design for serving
+qwen2.5-32b, compare architectures' hardware pressure (which arch wants
+which technology), and map the constrained latency/energy/area frontier
+for the serving cell.
 
   PYTHONPATH=src python examples/optimize_hw.py [--skip-pareto]
 """
@@ -9,8 +10,7 @@ import sys
 
 sys.path.insert(0, "src")
 
-from repro.core import ArchParams, TechParams, optimize, pareto_dse, simulate
-from repro.core.dopt import derive_tech_targets
+from repro import Session, Workload
 from repro.workloads import lm_cell
 
 
@@ -18,10 +18,11 @@ def pareto_frontier(g_decode, population: int = 12, steps: int = 10):
     """Population-scale multi-objective DSE: what does the latency/energy/
     area trade space of decode-serving look like, and which designs win
     under the edge-class budget?"""
-    res = pareto_dse(
-        g_decode, seeds=("base", "edge", "datacenter"), population=population,
-        steps=steps, lr=0.1, area_budget=700.0, power_budget=150.0, key=0,
-    )
+    res = Session().frontier(
+        Workload(g_decode), seeds=("base", "edge", "datacenter"),
+        population=population, steps=steps, lr=0.1,
+        area_budget=700.0, power_budget=150.0, key=0,
+    ).raw
     print(f"\nPareto frontier of decode serving ({population} members, "
           f"{steps} epochs, area<=700mm^2, power<=150W): "
           f"{res.front.size} designs, hypervolume {res.hypervolume:.1f}")
@@ -33,31 +34,36 @@ def pareto_frontier(g_decode, population: int = 12, steps: int = 10):
 
 
 def main():
+    sess = Session("base")
+
     # 1. what does DECODE-serving qwen2.5-32b want from hardware? -----------
-    g_decode = lm_cell("qwen2.5-32b", "decode_32k")
-    res = optimize(g_decode, objective="time", opt_over="tech", steps=30, lr=0.08)
+    g_decode = Workload(lm_cell("qwen2.5-32b", "decode_32k"), labels=("qwen-decode",))
+    res = sess.optimize(g_decode, objective="time", opt_over="tech", steps=30, lr=0.08)
     print("qwen2.5-32b decode — top technology levers (objective: time):")
-    for name, elast in res.importance[:5]:
-        print(f"   {name:42s} |elasticity| {elast:.3f}")
+    for a in res.importance[:5]:
+        print(f"   {a.parameter:42s} |elasticity| {abs(a.elasticity):.3f}")
 
     # 2. derive an accelerator design for the same cell ----------------------
-    res2 = optimize(g_decode, objective="edp", opt_over="arch", steps=40, lr=0.1)
-    a = res2.arch
+    res2 = sess.optimize(g_decode, objective="edp", opt_over="arch", steps=40, lr=0.1)
+    from repro import Architecture
+
+    a = Architecture(res2.to_dhd()).arch  # the optimized design, via .dhd text
     print(f"\nderived accelerator: systolic {float(a.sys_arr_x):.0f}x"
           f"{float(a.sys_arr_y):.0f}x{float(a.sys_arr_n):.0f}, "
           f"gbuf {float(a.capacity[1])/2**20:.0f} MB, "
           f"{float(a.frequency)/1e9:.2f} GHz "
-          f"(EDP {res2.history['edp'][0]/res2.history['edp'][-1]:.0f}x better)")
+          f"(EDP {res2.improvement:.0f}x better)")
 
     # 3. compare hardware pressure across architecture families --------------
+    #    (explain = the same elasticities, served without a descent)
     print("\nper-family #1 technology lever (train_4k):")
     for arch in ("granite-3-8b", "kimi-k2-1t-a32b", "falcon-mamba-7b"):
-        g = lm_cell(arch, "train_4k")
-        r = optimize(g, objective="time", opt_over="tech", steps=12, lr=0.08)
-        print(f"   {arch:24s} -> {r.importance[0][0]}")
+        rep = sess.explain(Workload(lm_cell(arch, "train_4k")), objective="time")
+        top = next(at for at in rep.attribution if at.parameter.startswith("tech."))
+        print(f"   {arch:24s} -> {top.parameter.removeprefix('tech.')}")
 
     # 4. paper Fig. 3: technology targets for 10x EDP on the decode cell -----
-    tt = derive_tech_targets(g_decode, goal_factor=10.0, steps=80, lr=0.12)
+    tt = sess.tech_targets(g_decode, goal_factor=10.0, steps=80, lr=0.12)
     print(f"\n10x-EDP technology targets derived in {tt['epochs']} epochs "
           f"(achieved {tt['achieved_factor']:.1f}x):")
     moved = sorted(tt["targets"].items(), key=lambda kv: -abs(kv[1]["factor"] - 1))
@@ -66,7 +72,7 @@ def main():
 
     # 5. the budget-constrained latency/energy/area frontier -----------------
     if "--skip-pareto" not in sys.argv:
-        pareto_frontier(g_decode)
+        pareto_frontier(lm_cell("qwen2.5-32b", "decode_32k"))
 
 
 if __name__ == "__main__":

@@ -1,8 +1,18 @@
-"""Quickstart: DRAGON in 60 seconds.
+"""Quickstart: DRAGON in 60 seconds, through the front door.
 
-Simulate a BERT-class workload on a TPU-v1-flavoured accelerator, look at
-where the time/energy goes, then let DOpt improve the design's EDP and
-derive which *technology* parameters matter most.
+The whole suite is three types::
+
+    from repro import Session, Architecture, Workload
+
+    sess = Session(Architecture("edge"))          # a design point
+    rep = sess.simulate(Workload("bert_base"))    # DSim -> SimReport
+    rep = sess.explain("bert_base")               # + gradient attribution
+    opt = sess.optimize("bert_base", steps=40)    # DOpt -> OptResult
+    front = sess.frontier(["lstm", "bert_base"])  # popsim -> FrontierResult
+
+A Session caches compiled programs by (spec, mapper config, workload shape
+bucket, objective) — repeated queries, the serving pattern, never retrace
+and never recompile (see sess.stats).
 
   PYTHONPATH=src python examples/quickstart.py
 """
@@ -10,56 +20,64 @@ import sys
 
 sys.path.insert(0, "src")
 
-import jax
-
-from repro.core import ArchParams, TechParams, load_arch, optimize, parse_arch, simulate
-from repro.workloads import get_workload
+from repro import Architecture, Session, Workload
 
 
 def main():
-    # 1. a workload is a dataflow graph ------------------------------------
-    g = get_workload("bert_base")
-    print(f"workload: bert_base — {g.n_vertices} vertices, "
-          f"{float(g.total_flops)/1e9:.1f} GFLOPs")
+    # 1. a Session serves queries against one architecture -----------------
+    sess = Session(Architecture("base"))  # .dhd library name | text | pytrees
+    wl = Workload("bert_base")
+    print(f"workload: {wl}")
 
-    # 2. DSim: simulate it on the default accelerator ----------------------
-    tech, arch = TechParams.default(), ArchParams.default()
-    perf = simulate(tech, arch, g)
-    print(f"baseline : runtime {float(perf.runtime)*1e3:8.2f} ms   "
-          f"energy {float(perf.energy)*1e3:8.2f} mJ   "
-          f"area {float(perf.area):6.1f} mm^2   EDP {float(perf.edp):.3e}")
+    # 2. DSim: simulate it — the report explains where time/energy went ----
+    rep = sess.simulate(wl)
+    w = rep.workloads[0]
+    print(f"baseline : runtime {w.runtime_s * 1e3:8.2f} ms   "
+          f"energy {w.energy_j * 1e3:8.2f} mJ   "
+          f"area {rep.area_mm2:6.1f} mm^2   EDP {w.edp:.3e}")
+    hot = w.top_vertices(1)[0]
+    print(f"hottest vertex: {hot.name} ({hot.time_share:.0%} of runtime)")
 
-    # 3. architectures are text: the .dhd description language --------------
-    #    (library: base / edge / mobile / datacenter / rram_cim / hbm_class /
-    #     wafer_scale — see src/repro/configs/arch/ and docs/dhdl.md)
-    edge = load_arch("edge")
-    p_edge = simulate(edge.tech, edge.arch, g, edge.spec)
-    print(f"edge.dhd : runtime {float(p_edge.runtime)*1e3:8.2f} ms   "
-          f"energy {float(p_edge.energy)*1e3:8.2f} mJ   "
-          f"area {float(p_edge.area):6.1f} mm^2")
-    mine = parse_arch("""
+    # 3. architectures are text (.dhd); one constructor for every spelling -
+    edge = Architecture("edge")
+    p_edge = sess.simulate(wl, architecture=edge)
+    print(f"edge.dhd : runtime {p_edge.runtime_s * 1e3:8.2f} ms   "
+          f"energy {p_edge.energy_j * 1e3:8.2f} mJ   "
+          f"area {p_edge.area_mm2:6.1f} mm^2")
+    mine = Architecture("""
         arch my_edge inherits edge {          # compose by inheritance
           memory globalBuf { capacity *= 4 }  # ...and multiplicative tweaks
           compute systolicArray { x = 128  y = 128 }
         }""")
-    p_mine = simulate(mine.tech, mine.arch, g, mine.spec)
-    print(f"my_edge  : runtime {float(p_mine.runtime)*1e3:8.2f} ms   "
+    p_mine = sess.simulate(wl, architecture=mine)
+    print(f"my_edge  : runtime {p_mine.runtime_s * 1e3:8.2f} ms   "
           f"(4x buffer + bigger array, straight from text)")
 
-    # 4. the WHOLE simulator is differentiable ------------------------------
-    grads = jax.grad(lambda t: simulate(t, arch, g).edp)(tech)
-    print(f"d EDP / d DRAM-cell-latency = {float(grads.cell_read_latency[2]):.3e}"
-          "  <- gradients through the mapping itself")
+    # 4. the WHOLE simulator is differentiable — explain() serves the
+    #    gradients as ranked bottleneck attribution --------------------------
+    exp = sess.explain(wl, objective="edp")
+    print("EDP bottlenecks (d log EDP / d log param):")
+    for a in exp.bottlenecks(3):
+        print(f"   {a.action:8s} {a.parameter:40s} |e| {abs(a.elasticity):.3f}")
 
     # 5. DOpt: gradient-descend the design (arch + technology jointly) ------
-    res = optimize(g, objective="edp", steps=40, lr=0.1)
-    final = simulate(res.tech, res.arch, g)
-    print(f"optimized: runtime {float(final.runtime)*1e3:8.2f} ms   "
-          f"energy {float(final.energy)*1e3:8.2f} mJ   "
-          f"EDP {float(final.edp):.3e}  "
-          f"({float(perf.edp)/float(final.edp):.0f}x better)")
+    opt = sess.optimize(wl, objective="edp", steps=40, lr=0.1)
+    o = opt.optimized.workloads[0]
+    print(f"optimized: runtime {o.runtime_s * 1e3:8.2f} ms   "
+          f"energy {o.energy_j * 1e3:8.2f} mJ   "
+          f"EDP {o.edp:.3e}  ({opt.improvement:.0f}x better)")
     print("top technology levers:",
-          " > ".join(n for n, _ in res.importance[:4]))
+          " > ".join(a.parameter for a in opt.importance[:4]))
+    # the optimized design round-trips through .dhd text
+    print(f"optimized design serializes to {len(opt.to_dhd().splitlines())} "
+          f"lines of .dhd")
+
+    # 6. the serving pattern: warm queries never retrace --------------------
+    t0 = sess.stats.traces
+    sess.simulate(wl, architecture=mine)  # warm: same bucket, new design point
+    st = sess.stats
+    print(f"session cache: {st.programs} programs, {st.hits} hits, "
+          f"{st.traces} traces ({st.traces - t0} new for the warm query)")
 
 
 if __name__ == "__main__":

@@ -1,6 +1,12 @@
-"""Serving demo: continuous batching with mixed prompt lengths, temperatures
-and arrival times on a reduced qwen2.5 config (same engine the production
-launcher uses; slots/caches/sampling identical).
+"""Serving demo, both engines:
+
+1. continuous token batching with mixed prompt lengths, temperatures and
+   arrival times on a reduced qwen2.5 config (same engine the production
+   launcher uses; slots/caches/sampling identical);
+2. DRAGON design queries as a service: a DesignService answers a mixed
+   stream of simulate/explain/optimize questions against one compiled
+   model — after the first query per shape bucket, everything is warm
+   (the Session compiled-program cache; see docs/api.md).
 
   PYTHONPATH=src python examples/serve_demo.py
 """
@@ -14,10 +20,10 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.models.model import build_model
-from repro.serving import Engine, Request
+from repro.serving import DesignQuery, DesignService, Engine, Request
 
 
-def main():
+def token_demo():
     cfg = get_config("qwen2.5-32b").reduced()
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
@@ -43,6 +49,37 @@ def main():
     for r in sorted(done, key=lambda r: r.rid)[:4]:
         print(f"  req {r.rid}: prompt[{len(r.prompt)}] temp={r.temperature} "
               f"-> {[int(np.asarray(t)) for t in r.generated]}")
+
+
+def design_demo():
+    svc = DesignService("base")
+    queries = [
+        DesignQuery(0, "simulate", "lstm"),
+        DesignQuery(1, "simulate", "merge_sort"),              # same bucket: warm
+        DesignQuery(2, "simulate", "dlrm", architecture="edge"),  # new design: warm
+        DesignQuery(3, "explain", "lstm", objective="edp"),
+        DesignQuery(4, "explain", "dlrm", objective="edp"),    # warm
+        DesignQuery(5, "optimize", "lstm", objective="edp",
+                    params=dict(steps=8, lr=0.05)),
+        DesignQuery(6, "optimize", "merge_sort", objective="edp",
+                    params=dict(steps=8, lr=0.05)),            # warm
+    ]
+    replies = svc.serve(queries)
+    print("\ndesign-query service (one compiled model, many questions):")
+    for r in replies:
+        print(f"  q{r.qid} {r.kind:9s} {'cold' if r.compiled else 'warm':4s} "
+              f"{r.wall_s * 1e3:8.1f} ms")
+    st = svc.stats
+    warm = [r.wall_s for r in replies if not r.compiled and r.kind == "simulate"]
+    cold = [r.wall_s for r in replies if r.compiled and r.kind == "simulate"]
+    if warm and cold:
+        print(f"  simulate cold->warm: {min(cold) / max(min(warm), 1e-9):.0f}x faster")
+    print(f"  cache: {st.programs} programs, {st.hits} hits, {st.traces} traces")
+
+
+def main():
+    token_demo()
+    design_demo()
 
 
 if __name__ == "__main__":

@@ -1,0 +1,99 @@
+"""DRAGON reproduction — differentiable hardware simulation & optimization.
+
+The public surface is the typed façade::
+
+    from repro import Session, Architecture, Workload
+
+    rep = Session(Architecture("edge")).simulate(Workload("bert_base"))
+
+Everything is imported lazily: ``import repro`` itself pulls in neither JAX
+nor the engines, so CLIs and config tooling stay instant.  The engine layer
+(``repro.core.*``) remains importable as-is — it is the numerical oracle
+the façade wraps — but the legacy *top-level* engine spellings routed here
+(``repro.simulate`` ...) emit a DeprecationWarning and forward; they go
+away one release after the façade landed.
+"""
+from __future__ import annotations
+
+_FACADE = {
+    "Session": "repro.api",
+    "Architecture": "repro.api",
+    "Workload": "repro.api",
+    "CacheStats": "repro.api",
+    "SimReport": "repro.core.report",
+    "OptResult": "repro.core.report",
+    "FrontierResult": "repro.core.report",
+    "Attribution": "repro.core.report",
+    "Graph": "repro.core.graph",
+    "MapperCfg": "repro.core.mapper",
+    "ArchParams": "repro.core.params",
+    "ArchSpec": "repro.core.params",
+    "TechParams": "repro.core.params",
+    "get_workload": "repro.workloads",
+}
+
+# one-release deprecation shims: the old free-function spellings, reachable
+# from the top level but warning — use Session instead
+_DEPRECATED = {
+    "simulate": "repro.core.dsim",
+    "simulate_stacked": "repro.core.dsim",
+    "optimize": "repro.core.dopt",
+    "derive_tech_targets": "repro.core.dopt",
+    "pareto_dse": "repro.core.popsim",
+    "load_arch": "repro.core.dhdl",
+    "parse_arch": "repro.core.dhdl",
+    "serialize_arch": "repro.core.dhdl",
+}
+
+__all__ = ["__version__", *_FACADE]
+
+
+def _version() -> str:
+    """Single-sourced from pyproject.toml: the installed distribution's
+    metadata when packaged, the file itself in a source checkout."""
+    try:
+        from importlib.metadata import version
+
+        return version("dragon-repro")
+    except Exception:
+        pass
+    import pathlib
+    import re
+
+    try:
+        text = (pathlib.Path(__file__).resolve().parents[2] / "pyproject.toml").read_text()
+        m = re.search(r'^version\s*=\s*"([^"]+)"', text, re.M)
+        if m:
+            return m.group(1)
+    except OSError:
+        pass
+    return "0+unknown"
+
+
+def __getattr__(name: str):
+    if name == "__version__":
+        v = _version()
+        globals()["__version__"] = v
+        return v
+    if name in _FACADE:
+        import importlib
+
+        value = getattr(importlib.import_module(_FACADE[name]), name)
+        globals()[name] = value  # cache: __getattr__ only fires on misses
+        return value
+    if name in _DEPRECATED:
+        import importlib
+        import warnings
+
+        warnings.warn(
+            f"repro.{name} is deprecated; use repro.Session (see docs/api.md). "
+            f"The engine spelling {_DEPRECATED[name]}.{name} remains available.",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        return getattr(importlib.import_module(_DEPRECATED[name]), name)
+    raise AttributeError(f"module 'repro' has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted({*globals(), *__all__, *_DEPRECATED})

@@ -1,0 +1,712 @@
+"""The DRAGON front door: one typed façade over DGen, DSim and DOpt.
+
+The suite's engines are free functions over raw pytrees — right for
+composing JAX programs, wrong as a public surface: every caller re-implements
+the same specialize → stack → simulate → optimize plumbing and pays compile
+time on every query.  This module is the served API instead:
+
+    from repro import Session, Architecture, Workload
+
+    sess = Session(Architecture("edge"))            # .dhd text, library name,
+    rep = sess.simulate(Workload("bert_base"))      #   or raw pytrees
+    print(rep)                                      # explainable SimReport
+    opt = sess.optimize("bert_base", objective="edp", steps=40)
+    front = sess.frontier(["lstm", "bert_base"], population=12)
+
+Three types:
+
+  * :class:`Workload` — a validated workload set.  Wraps one Graph, a list,
+    or workload names; stacks them (``Graph.stack``) with the vertex axis
+    padded to a shape *bucket* (next power of two, min 32) so different
+    workload sets of similar size land on the same compiled program.
+    Padding is exact — the mapper prices no-op vertices at zero.
+  * :class:`Architecture` — a validated design point: ``.dhd`` text, a
+    library name, a ``CompiledArch``, or raw ``(tech, arch, spec)`` pytrees
+    — one constructor, ``CompiledArch`` underneath, ``to_dhd()`` back out.
+  * :class:`Session` — owns the compiled-program cache and routes
+    ``simulate()`` / ``optimize()`` / ``frontier()`` / ``explain()`` to the
+    dsim / dopt / popsim / pareto engines, returning the frozen result
+    objects from :mod:`repro.core.report`.
+
+Cache-key semantics (the serving contract)
+------------------------------------------
+
+Programs are keyed by ``(kind, ArchSpec, MapperCfg, shape bucket,
+objective signature)``:
+
+  * **ArchSpec / MapperCfg** are static configuration — they change the
+    traced program, so they key it;
+  * **shape bucket** is ``(n_workloads, padded_vertex_count)`` from
+    :attr:`Workload.bucket` — any workload set in the same bucket replays
+    the same executable;
+  * **objective signature** is the objective *name* only.  Objective
+    weights, budgets and penalty weights are *traced* arguments (PR 4), so
+    a changed mix reuses the program; technology/architecture parameter
+    values are traced too, so a changed design point never retraces.
+
+Repeated calls — the serving pattern — therefore never retrace and never
+recompile; :attr:`Session.stats` reports programs/hits/misses/traces, and
+the trace counts are asserted (not assumed) via
+:mod:`repro.core.instrument`.
+
+The engine layer (``repro.core.simulate`` / ``optimize`` / ``pareto_dse``
+...) keeps working as-is for one more release: it is the numerical oracle
+the façade is tested identical against.  New code — and everything under
+``examples/``, ``benchmarks/``, ``tools/`` (lint-enforced by
+``tools/check_api_surface.py``) — should use the façade.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import math
+from dataclasses import dataclass
+
+import jax
+import numpy as np
+
+from repro.core import dopt as _dopt
+from repro.core import instrument
+from repro.core import popsim as _popsim
+from repro.core.dhdl import CompiledArch, load_arch, parse_arch, serialize_arch
+from repro.core.dopt import from_log, tech_param_names, to_log
+from repro.core.dsim import (
+    PARETO_METRICS,
+    PerfEstimate,
+    simulate_breakdown,
+    simulate_stacked,
+    stacked_log_objective,
+)
+from repro.core.graph import Graph
+from repro.core.mapper import MapperCfg
+from repro.core.params import COMP_CLS, MEM_CLS, ArchParams, ArchSpec, TechParams
+from repro.core.report import (
+    Attribution,
+    ComputeClassReport,
+    FrontierPoint,
+    FrontierResult,
+    MemoryLevelReport,
+    OptResult,
+    SimReport,
+    VertexReport,
+    WorkloadReport,
+)
+from repro.workloads import get_workload
+
+__all__ = [
+    "Workload",
+    "Architecture",
+    "Session",
+    "CacheStats",
+    # result objects (re-exported from core.report)
+    "SimReport",
+    "OptResult",
+    "FrontierResult",
+    "Attribution",
+    # engine types call sites legitimately need alongside the façade
+    "Graph",
+    "MapperCfg",
+    "ArchParams",
+    "ArchSpec",
+    "TechParams",
+    "PerfEstimate",
+    "PARETO_METRICS",
+    "get_workload",
+]
+
+_MIN_BUCKET = 32  # below this the mapper's auto dispatch flips impls; also
+# keeps tiny-workload buckets from fragmenting the program cache
+
+
+def _bucket_vertices(v: int) -> int:
+    """Vertex-axis bucket: next power of two, at least ``_MIN_BUCKET``."""
+    return max(_MIN_BUCKET, 1 << (max(v, 1) - 1).bit_length())
+
+
+def _dhd_ident(name: str) -> str:
+    """Sanitize a display name into a ``.dhd`` identifier, so every
+    Architecture serializes to parseable text."""
+    import re
+
+    ident = re.sub(r"[^A-Za-z0-9_]", "_", name) or "anonymous"
+    return ident if ident[0].isalpha() or ident[0] == "_" else f"_{ident}"
+
+
+def _check_finite_positive(tree, what: str) -> None:
+    for leaf in jax.tree.leaves(tree):
+        a = np.asarray(leaf)
+        if not np.all(np.isfinite(a)):
+            raise ValueError(f"{what} contains non-finite values")
+        if np.any(a <= 0):
+            raise ValueError(f"{what} contains non-positive values (parameters are positive)")
+
+
+# --------------------------------------------------------------------------- #
+# Workload
+# --------------------------------------------------------------------------- #
+
+
+class Workload:
+    """A validated, shape-bucketed workload set.
+
+    ``source`` may be a workload name (resolved via
+    ``repro.workloads.get_workload``), a :class:`Graph`, another
+    ``Workload``, or a list mixing names and Graphs.  The set stacks into
+    one ``[W, V_bucket, ...]`` Graph (:attr:`stacked`) with vertex padding
+    to the shape bucket and the static per-vertex names stripped, so any
+    same-bucket set is *structurally identical* to jit — that is what lets
+    a :class:`Session` serve different workloads from one compiled program.
+
+    Construct once and reuse in hot loops: stacking is host work.
+    """
+
+    def __init__(self, source, *, labels: tuple[str, ...] | None = None):
+        graphs, auto_labels = self._resolve(source)
+        if not graphs:
+            raise ValueError("Workload needs at least one graph")
+        for lbl, g in zip(auto_labels, graphs):
+            if not isinstance(g, Graph):
+                raise TypeError(f"workload {lbl!r} is not a Graph (got {type(g).__name__})")
+            if g.n_vertices < 1:
+                raise ValueError(f"workload {lbl!r} has no vertices")
+            if g.n_comp.ndim != 2:
+                raise ValueError(
+                    f"workload {lbl!r} is already stacked ([W,V,...]); pass its member graphs"
+                )
+            for field in ("n_comp", "n_read", "n_write", "n_alloc"):
+                a = np.asarray(getattr(g, field))
+                if not np.all(np.isfinite(a)) or np.any(a < 0):
+                    raise ValueError(f"workload {lbl!r}.{field} must be finite and >= 0")
+        self.graphs: tuple[Graph, ...] = tuple(graphs)
+        self.labels: tuple[str, ...] = tuple(labels) if labels is not None else tuple(auto_labels)
+        if len(self.labels) != len(self.graphs):
+            raise ValueError(f"{len(self.labels)} labels for {len(self.graphs)} graphs")
+        vmax = max(g.n_vertices for g in self.graphs)
+        self._bucket = (len(self.graphs), _bucket_vertices(vmax))
+        self._stacked: Graph | None = None
+
+    @staticmethod
+    def _resolve(source) -> tuple[list[Graph], list[str]]:
+        if isinstance(source, Workload):
+            return list(source.graphs), list(source.labels)
+        if isinstance(source, (str, Graph)):
+            source = [source]
+        graphs, labels = [], []
+        for i, item in enumerate(source):
+            if isinstance(item, str):
+                graphs.append(get_workload(item))
+                labels.append(item)
+            elif isinstance(item, Graph):
+                graphs.append(item)
+                labels.append(f"workload{i}")
+            else:
+                raise TypeError(f"cannot build a Workload from {type(item).__name__}")
+        return graphs, labels
+
+    @property
+    def bucket(self) -> tuple[int, int]:
+        """``(n_workloads, padded_vertex_count)`` — the cache-key shape."""
+        return self._bucket
+
+    @property
+    def n_workloads(self) -> int:
+        return len(self.graphs)
+
+    @property
+    def stacked(self) -> Graph:
+        """The bucket-padded ``[W, V_bucket, ...]`` stack, names stripped."""
+        if self._stacked is None:
+            _, vb = self._bucket
+            gs = Graph.stack([g.pad_to(vb) for g in self.graphs])
+            self._stacked = dataclasses.replace(gs, names=())
+        return self._stacked
+
+    def __repr__(self) -> str:
+        w, v = self._bucket
+        return f"Workload({list(self.labels)!r}, bucket=[{w}, {v}])"
+
+
+# --------------------------------------------------------------------------- #
+# Architecture
+# --------------------------------------------------------------------------- #
+
+
+class Architecture:
+    """A validated design point — one constructor for every spelling.
+
+    ``Architecture("edge")`` loads the named ``.dhd`` library design;
+    ``Architecture("arch mine inherits edge { ... }")`` parses text (any
+    source containing ``{`` is treated as text); ``Architecture(ca)`` wraps
+    an existing :class:`CompiledArch`; ``Architecture(tech=..., arch=...,
+    spec=...)`` builds one from raw pytrees (defaults fill the gaps).
+    ``to_dhd()`` serializes back to canonical text — the suite's
+    interchange format (parse → serialize → parse is the identity).  Names
+    are sanitized to ``.dhd`` identifiers (``[A-Za-z_][A-Za-z0-9_]*``) so
+    every Architecture's text form is guaranteed parseable.
+    """
+
+    def __init__(
+        self,
+        source: "str | CompiledArch | Architecture | None" = None,
+        *,
+        tech: TechParams | None = None,
+        arch: ArchParams | None = None,
+        spec: ArchSpec | None = None,
+        name: str | None = None,
+    ):
+        if isinstance(source, Architecture):
+            ca = source._ca
+        elif isinstance(source, CompiledArch):
+            ca = source
+        elif isinstance(source, str):
+            ca = parse_arch(source) if "{" in source else load_arch(source)
+        elif source is None:
+            ca = CompiledArch(
+                name=name or "custom",
+                spec=spec if spec is not None else ArchSpec(),
+                arch=arch if arch is not None else ArchParams.default(),
+                tech=tech if tech is not None else TechParams.default(),
+            )
+        else:
+            raise TypeError(f"cannot build an Architecture from {type(source).__name__}")
+        if source is not None and (tech is not None or arch is not None or spec is not None):
+            ca = CompiledArch(
+                name=name or ca.name,
+                spec=spec if spec is not None else ca.spec,
+                arch=arch if arch is not None else ca.arch,
+                tech=tech if tech is not None else ca.tech,
+            )
+        elif name is not None and name != ca.name:
+            ca = CompiledArch(name=name, spec=ca.spec, arch=ca.arch, tech=ca.tech)
+        ident = _dhd_ident(ca.name)
+        if ident != ca.name:
+            ca = CompiledArch(name=ident, spec=ca.spec, arch=ca.arch, tech=ca.tech)
+        _check_finite_positive(ca.tech, f"Architecture {ca.name!r} tech params")
+        _check_finite_positive(ca.arch, f"Architecture {ca.name!r} arch params")
+        self._ca = ca
+
+    @property
+    def name(self) -> str:
+        return self._ca.name
+
+    @property
+    def spec(self) -> ArchSpec:
+        return self._ca.spec
+
+    @property
+    def arch(self) -> ArchParams:
+        return self._ca.arch
+
+    @property
+    def tech(self) -> TechParams:
+        return self._ca.tech
+
+    @property
+    def compiled(self) -> CompiledArch:
+        return self._ca
+
+    def to_dhd(self) -> str:
+        """Canonical ``.dhd`` text of this design (round-trips bit-exactly)."""
+        return serialize_arch(name=self.name, spec=self.spec, arch=self.arch, tech=self.tech)
+
+    def __repr__(self) -> str:
+        return f"Architecture({self.name!r})"
+
+
+# --------------------------------------------------------------------------- #
+# Session
+# --------------------------------------------------------------------------- #
+
+
+@dataclass(frozen=True)
+class CacheStats:
+    """Program-cache bookkeeping: ``traces`` counts actual compilations of
+    this session's programs (via the trace-side-effect probe); ``hits`` /
+    ``misses`` count cache-key lookups."""
+
+    programs: int
+    hits: int
+    misses: int
+    traces: int
+
+
+def _arch_param_names() -> list[str]:
+    names = []
+    for f in dataclasses.fields(ArchParams):
+        n = np.asarray(getattr(ArchParams.default(), f.name)).size
+        if n == 1:
+            names.append(f.name)
+        else:
+            names.extend(f"{cls}.{f.name}" for cls in MEM_CLS[:n])
+    return names
+
+
+def _flatten(tree) -> np.ndarray:
+    return np.concatenate([np.atleast_1d(np.asarray(x)) for x in jax.tree.leaves(tree)])
+
+
+class Session:
+    """The suite front door: simulate / optimize / frontier / explain
+    against one architecture, with compiled programs cached across calls.
+
+    ``architecture`` accepts anything :class:`Architecture` accepts (and
+    defaults to the library ``base`` design); per-call ``architecture=``
+    overrides never invalidate the cache — parameter values are traced
+    arguments, only a changed :class:`ArchSpec` keys a new program.
+    """
+
+    _ids = itertools.count()
+
+    def __init__(self, architecture="base", *, mcfg: MapperCfg = MapperCfg()):
+        self.architecture = Architecture(architecture)
+        self.mcfg = mcfg
+        self._tag = f"api.session{next(Session._ids)}"
+        self._programs: dict = {}  # key -> compiled callable (session programs)
+        self._engine_keys: set = set()  # engine-routed configs seen (bookkeeping)
+        self._hits = 0
+        self._misses = 0
+        self._workload_memo: dict[str, Workload] = {}
+
+    # ------------------------------------------------------------- helpers --
+    def _arch(self, architecture) -> Architecture:
+        if architecture is None:
+            return self.architecture
+        if isinstance(architecture, Architecture):
+            return architecture
+        return Architecture(architecture)
+
+    def _workload(self, workload) -> Workload:
+        if isinstance(workload, Workload):
+            return workload
+        if isinstance(workload, str):
+            if workload not in self._workload_memo:
+                self._workload_memo[workload] = Workload(workload)
+            return self._workload_memo[workload]
+        return Workload(workload)
+
+    def _program(self, key: tuple, build):
+        """The compiled-program cache: ``key`` -> jitted callable."""
+        fn = self._programs.get(key)
+        if fn is None:
+            self._misses += 1
+            fn = self._programs[key] = build()
+        else:
+            self._hits += 1
+        return fn
+
+    def _engine_call(self, key: tuple) -> None:
+        """Bookkeeping for calls whose program lives in the *engine's* jit
+        cache (optimize/frontier): hit/miss counts key recurrence; their
+        retraces show up in the engine's global probe tags
+        (``dopt._dopt_step`` / ``popsim._member_step``), not in
+        ``stats.traces``."""
+        if key in self._engine_keys:
+            self._hits += 1
+        else:
+            self._misses += 1
+            self._engine_keys.add(key)
+
+    @property
+    def stats(self) -> CacheStats:
+        # trailing "." so session1 never sums session10's counters
+        return CacheStats(
+            programs=len(self._programs),
+            hits=self._hits,
+            misses=self._misses,
+            traces=instrument.trace_count(prefix=f"{self._tag}."),
+        )
+
+    # ------------------------------------------------------------ programs --
+    def _perf_program(self, bucket, spec: ArchSpec, mcfg: MapperCfg):
+        """jit(simulate_stacked) — byte-identical to the engine call it wraps."""
+        tag = f"{self._tag}.simulate"
+
+        def build():
+            def fn(tech, arch, gstack):
+                instrument.count_trace(tag)
+                return simulate_stacked(tech, arch, gstack, spec, mcfg)
+
+            return jax.jit(fn)
+
+        return self._program(("simulate", spec, mcfg, bucket), build)
+
+    def _report_program(self, bucket, spec: ArchSpec, mcfg: MapperCfg):
+        """One program for the whole report: batched PerfEstimate + the
+        per-vertex / per-level breakdown extras (simulate_breakdown computes
+        both in one pass, so reports cost one compile and one dispatch)."""
+        tag = f"{self._tag}.report"
+
+        def build():
+            def fn(tech, arch, gstack):
+                instrument.count_trace(tag)
+                return jax.vmap(
+                    lambda g: simulate_breakdown(tech, arch, g, spec, mcfg)
+                )(gstack)
+
+            return jax.jit(fn)
+
+        return self._program(("report", spec, mcfg, bucket), build)
+
+    def _explain_program(self, bucket, spec: ArchSpec, mcfg: MapperCfg, objective: str):
+        """Elasticities d log(objective) / d log(param) for tech AND arch."""
+        tag = f"{self._tag}.explain"
+
+        def build():
+            def fn(tech, arch, gstack):
+                instrument.count_trace(tag)
+
+                def loss(tz, az):
+                    val, _ = stacked_log_objective(
+                        from_log(tz), from_log(az), gstack, objective, spec=spec, mcfg=mcfg
+                    )
+                    return val
+
+                return jax.grad(loss, argnums=(0, 1))(to_log(tech), to_log(arch))
+
+            return jax.jit(fn)
+
+        return self._program(("explain", spec, mcfg, bucket, objective), build)
+
+    # ------------------------------------------------------------ simulate --
+    def perf(self, workload, *, architecture=None) -> PerfEstimate:
+        """Raw batched :class:`PerfEstimate` (device arrays, leading [W]
+        axis) from the cached program — the zero-overhead serving path; use
+        :meth:`simulate` for the explainable report."""
+        w, a = self._workload(workload), self._arch(architecture)
+        prog = self._perf_program(w.bucket, a.spec, self.mcfg)
+        return prog(a.tech, a.arch, w.stacked)
+
+    def simulate(self, workload, *, architecture=None) -> SimReport:
+        """Simulate the workload set; returns a :class:`SimReport` with
+        per-workload totals and per-memory-level / per-vertex breakdowns."""
+        w, a = self._workload(workload), self._arch(architecture)
+        perfs, extras = self._report_program(w.bucket, a.spec, self.mcfg)(
+            a.tech, a.arch, w.stacked
+        )
+        return self._build_report(a, w, perfs, extras)
+
+    def explain(self, workload, *, objective: str = "edp", architecture=None) -> SimReport:
+        """:meth:`simulate` + gradient-based bottleneck attribution: every
+        technology and architecture parameter ranked by its elasticity
+        d log(objective) / d log(parameter) — DOpt's Table-3 signal, served
+        as an explanation instead of a descent direction."""
+        w, a = self._workload(workload), self._arch(architecture)
+        rep = self.simulate(w, architecture=a)
+        g_tech, g_arch = self._explain_program(w.bucket, a.spec, self.mcfg, objective)(
+            a.tech, a.arch, w.stacked
+        )
+        names = [f"tech.{n}" for n in tech_param_names()] + [
+            f"arch.{n}" for n in _arch_param_names()
+        ]
+        elast = np.concatenate([_flatten(g_tech), _flatten(g_arch)])
+        ranked = sorted(zip(names, elast.tolist()), key=lambda kv: -abs(kv[1]))
+        attribution = tuple(Attribution(parameter=n, elasticity=float(v)) for n, v in ranked)
+        return dataclasses.replace(rep, objective=objective, attribution=attribution)
+
+    # ------------------------------------------------------------ optimize --
+    def optimize(
+        self,
+        workload,
+        *,
+        objective: str = "edp",
+        steps: int = 200,
+        lr: float = 0.05,
+        opt_over: str = "both",
+        architecture=None,
+        report: bool = True,
+        **engine_kw,
+    ) -> OptResult:
+        """Gradient-descend the design for this workload set (DOpt).
+
+        Routes to ``repro.core.optimize`` with the session's bucketed stack,
+        so repeated calls with same-bucket workloads reuse the engine's
+        fused-chunk program (the mix/budget arguments are traced — see
+        module docstring).  ``engine_kw`` forwards the engine's knobs
+        (``fused``, ``chunk``, ``target_factor``, ``objective_weights``,
+        ``area_budget``, ``power_budget``, ``penalty_weight``, ...).
+
+        ``report=False`` skips the baseline/optimized :class:`SimReport`
+        pair (those fields come back ``None``) — the lean serving/benchmark
+        mode where only the descent itself should be on the clock.
+        """
+        w, a = self._workload(workload), self._arch(architecture)
+        mcfg = engine_kw.pop("mcfg", self.mcfg)
+        # everything static to the engine's fused-chunk program belongs in
+        # the key: steps/target_factor/chunk set the scan length, and
+        # fused/area_constraint are static argnames of _fused_chunk
+        self._engine_call(
+            ("optimize", a.spec, mcfg, w.bucket, objective, opt_over, steps,
+             engine_kw.get("fused", True), engine_kw.get("chunk"),
+             engine_kw.get("target_factor"), engine_kw.get("area_constraint"))
+        )
+        res = _dopt.optimize(
+            w.stacked,
+            tech=a.tech,
+            arch=a.arch,
+            spec=a.spec,
+            objective=objective,
+            opt_over=opt_over,
+            steps=steps,
+            lr=lr,
+            mcfg=mcfg,
+            **engine_kw,
+        )
+        opt_arch = Architecture(
+            None, name=f"{a.name}_opt", tech=res.tech, arch=res.arch, spec=a.spec
+        )
+        hist = tuple(float(math.exp(v)) for v in res.history["objective"])
+        improvement = hist[0] / max(hist[-1], 1e-300) if hist else 1.0
+        return OptResult(
+            objective=objective,
+            opt_over=opt_over,
+            epochs=len(hist),
+            improvement=improvement,
+            objective_history=hist,
+            importance=tuple(
+                Attribution(parameter=f"tech.{n}", elasticity=v) for n, v in res.importance
+            ),
+            baseline=self.simulate(w, architecture=a) if report else None,
+            optimized=self.simulate(w, architecture=opt_arch) if report else None,
+            dhd=opt_arch.to_dhd(),
+        )
+
+    def tech_targets(self, workload, *, goal_factor: float = 100.0, **engine_kw) -> dict:
+        """Technology targets for a ``goal_factor``x objective improvement
+        (paper §8.3) — thin passthrough to ``repro.core.dopt.derive_tech_targets``
+        on the session's bucketed stack."""
+        w = self._workload(workload)
+        return _dopt.derive_tech_targets(w.stacked, goal_factor=goal_factor, **engine_kw)
+
+    # ------------------------------------------------------------ frontier --
+    def frontier(
+        self,
+        workload,
+        *,
+        seeds: tuple[str, ...] = ("base", "edge", "datacenter"),
+        population: int = 24,
+        steps: int = 24,
+        lr: float = 0.1,
+        metrics: tuple[str, ...] = ("time", "energy", "area"),
+        area_budget: float | None = None,
+        power_budget: float | None = None,
+        **engine_kw,
+    ) -> FrontierResult:
+        """Population-scale constrained multi-objective DSE: the feasible
+        latency/energy/area Pareto front for this workload set (popsim).
+
+        Seeds descend from the named ``.dhd`` library designs (the session
+        architecture does not constrain the population).  ``engine_kw``
+        forwards ``repro.core.pareto_dse``'s knobs (``penalty_weight``,
+        ``sigma``, ``mesh``, ``key``, ``hv_box``, ...).
+        """
+        w = self._workload(workload)
+        mcfg = engine_kw.pop("mcfg", self.mcfg)
+        self._engine_call(
+            ("frontier", mcfg, w.bucket, tuple(metrics), tuple(seeds),
+             population, steps, engine_kw.get("chunk"), engine_kw.get("opt_over", "both"))
+        )
+        res = _popsim.pareto_dse(
+            w.stacked,
+            seeds=seeds,
+            population=population,
+            steps=steps,
+            lr=lr,
+            metrics=metrics,
+            area_budget=area_budget,
+            power_budget=power_budget,
+            mcfg=mcfg,
+            **engine_kw,
+        )
+        front = tuple(
+            FrontierPoint(
+                index=int(win["index"]),
+                seed=win["seed"],
+                weights=tuple(win["weights"][m] for m in PARETO_METRICS),
+                time_s=win["time_s"],
+                energy_j=win["energy_j"],
+                area_mm2=win["area_mm2"],
+                power_w=win["power_w"],
+                edp=win["edp"],
+                dhd=win["dhd"],
+            )
+            for win in res.winners
+        )
+        return FrontierResult(
+            metrics=tuple(metrics),
+            population=population,
+            epochs=steps,
+            feasible=int(res.feasible.sum()),
+            hypervolume=float(res.hypervolume),
+            area_budget=float("inf") if area_budget is None else float(area_budget),
+            power_budget=float("inf") if power_budget is None else float(power_budget),
+            front=front,
+            raw=res,
+        )
+
+    # -------------------------------------------------------------- report --
+    def _build_report(self, a: Architecture, w: Workload, perfs, extras) -> SimReport:
+        state = perfs.state
+        reads = np.asarray(state.reads)
+        writes = np.asarray(state.writes)
+        comp_ops = np.asarray(state.comp_ops)
+        bw_util = np.asarray(state.bw_util)
+        ex = {k: np.asarray(v) for k, v in extras.items()}
+        runtime = np.asarray(perfs.runtime)
+        workloads = []
+        for i, (lbl, g) in enumerate(zip(w.labels, w.graphs)):
+            v = g.n_vertices
+            time_v = ex["time_v"][i, :v]
+            energy_v = ex["energy_v"][i, :v]
+            rt = float(runtime[i])
+            levels = tuple(
+                MemoryLevelReport(
+                    level=lvl,
+                    reads_bytes=float(reads[i, li]),
+                    writes_bytes=float(writes[i, li]),
+                    transfer_time_s=float(ex["t_level"][i, li]),
+                    dynamic_energy_j=float(ex["e_level_dyn"][i, li]),
+                    leakage_energy_j=float(ex["e_level_leak"][i, li]),
+                    bw_utilization=float(bw_util[i, li]),
+                )
+                for li, lvl in enumerate(MEM_CLS)
+            )
+            compute = tuple(
+                ComputeClassReport(
+                    unit=unit,
+                    flops=float(comp_ops[i, ci]),
+                    dynamic_energy_j=float(ex["e_comp_dyn"][i, ci]),
+                    leakage_energy_j=float(ex["e_comp_leak"][i, ci]),
+                )
+                for ci, unit in enumerate(COMP_CLS)
+            )
+            vertices = tuple(
+                VertexReport(
+                    name=str(g.names[vi]) if vi < len(g.names) else f"v{vi}",
+                    time_s=float(time_v[vi]),
+                    energy_j=float(energy_v[vi]),
+                    time_share=float(time_v[vi] / max(rt, 1e-300)),
+                )
+                for vi in range(v)
+            )
+            workloads.append(
+                WorkloadReport(
+                    label=lbl,
+                    runtime_s=rt,
+                    energy_j=float(np.asarray(perfs.energy)[i]),
+                    power_w=float(np.asarray(perfs.power)[i]),
+                    edp=float(np.asarray(perfs.edp)[i]),
+                    cycles=float(np.asarray(perfs.cycles)[i]),
+                    energy_mem_j=float(np.asarray(perfs.energy_mem)[i]),
+                    energy_comp_j=float(np.asarray(perfs.energy_comp)[i]),
+                    energy_leak_j=float(np.asarray(perfs.energy_leak)[i]),
+                    levels=levels,
+                    compute=compute,
+                    vertices=vertices,
+                )
+            )
+        return SimReport(
+            architecture=a.name,
+            objective="",
+            area_mm2=float(np.asarray(perfs.area)[0]),
+            workloads=tuple(workloads),
+        )

@@ -26,6 +26,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import instrument
 from repro.core.dsim import PARETO_METRICS, mixed_log_objective, stacked_log_objective
 from repro.core.graph import Graph
 from repro.core.mapper import MapperCfg
@@ -149,6 +150,7 @@ def _dopt_step(state, gstack: Graph, lr, mix, spec, objective, area_constraint, 
     multi-objective scalarization); for string objectives it is carried but
     unused.
     """
+    instrument.count_trace("dopt._dopt_step")  # retrace probe (trace-time only)
     tech_z, arch_z, type_logits, tstate, astate, ystate = state
     dopt2 = opt_over == "both+types"
 
@@ -257,10 +259,15 @@ def optimize(
     stand-in for the pre-fusion driver (the original additionally clamped
     out-of-jit and made five scalar transfers per epoch), retained for
     equivalence tests and before/after throughput benchmarks.
+
+    ``graphs`` may be a single Graph, a list of Graphs, or an already
+    ``Graph.stack()``-ed workload set (leading [W] axis) — the façade passes
+    pre-bucketed stacks so same-shape calls share one compiled program.
     """
     if isinstance(graphs, Graph):
-        graphs = [graphs]
-    gstack = Graph.stack(list(graphs))
+        gstack = graphs if graphs.n_comp.ndim == 3 else Graph.stack([graphs])
+    else:
+        gstack = Graph.stack(list(graphs))
     tech = tech or TechParams.default()
     arch = arch or ArchParams.default()
 
@@ -378,7 +385,10 @@ def derive_tech_targets(
     # baseline objective at the default design point: a direct simulate —
     # not a throwaway optimize(steps=1, lr=0) that jit-compiles a full
     # gradient step just to read one forward value
-    gstack = Graph.stack([graphs] if isinstance(graphs, Graph) else list(graphs))
+    if isinstance(graphs, Graph) and graphs.n_comp.ndim == 3:
+        gstack = graphs
+    else:
+        gstack = Graph.stack([graphs] if isinstance(graphs, Graph) else list(graphs))
     base_val, _ = stacked_log_objective(
         TechParams.default(), ArchParams.default(), gstack, objective, spec=spec
     )

@@ -19,7 +19,7 @@ import jax.numpy as jnp
 
 from repro.core.dgen import ConcreteHW, specialize
 from repro.core.graph import Graph, workload_optimize
-from repro.core.mapper import MapperCfg, MapState, map_workload
+from repro.core.mapper import MapperCfg, MapState, map_workload, map_workload_breakdown
 from repro.core.params import ArchParams, ArchSpec, TechParams
 
 
@@ -86,6 +86,56 @@ def simulate(
 @partial(jax.jit, static_argnames=("spec", "mcfg"))
 def simulate_jit(tech, arch, g, spec: ArchSpec = ArchSpec(), mcfg: MapperCfg = MapperCfg()):
     return simulate(tech, arch, g, spec, mcfg)
+
+
+def simulate_breakdown(
+    tech: TechParams,
+    arch: ArchParams,
+    g: Graph,
+    spec: ArchSpec = ArchSpec(),
+    mcfg: MapperCfg = MapperCfg(),
+    type_weights: jax.Array | None = None,
+) -> tuple[PerfEstimate, dict]:
+    """Simulate + the per-level / per-vertex attribution arrays.
+
+    The PerfEstimate is the ordinary :func:`simulate` result (same mapper
+    dispatch, same numbers); the extras dict is what the façade's
+    explainable :class:`repro.core.report.SimReport` is built from:
+
+      * ``time_v`` / ``energy_v`` [V] — per-vertex wall time and energy
+        (dynamic traffic + compute + leakage prorated by the vertex's time;
+        vertex times/energies sum to the PerfEstimate totals — exactly
+        under the associative/pallas dispatch, to the formulations' tested
+        equivalence under ``scan_impl="ref"``);
+      * ``e_level_dyn`` / ``e_level_leak`` [N_MEM] — per-memory-level energy;
+      * ``e_comp_dyn`` / ``e_comp_leak`` [N_COMP] — per-compute-class energy;
+      * ``t_level`` [N_MEM] — demanded transfer time per level.
+
+    Fully differentiable (the breakdown is the same mapper math, un-reduced).
+    """
+    chw = specialize(tech, arch, spec, type_weights)
+    perf = simulate_chw(chw, g, mcfg)
+    bd = map_workload_breakdown(chw, g, mcfg)
+    ms = perf.state
+    leak_w = jnp.sum(chw.mem_leakage) + jnp.sum(chw.comp_leakage)
+    e_v_dyn = (
+        g.n_read @ chw.read_energy_pb
+        + g.n_write @ chw.write_energy_pb
+        + g.n_comp @ chw.energy_per_flop
+    ) * bd["active"]
+    extras = dict(
+        time_v=bd["time_v"],
+        energy_v=e_v_dyn + leak_w * bd["time_v"],
+        tiles_v=bd["tiles_v"],
+        t_comp_v=bd["t_comp_v"],
+        t_main_exposed_v=bd["t_main_exposed_v"],
+        t_level=bd["t_level"],
+        e_level_dyn=ms.reads * chw.read_energy_pb + ms.writes * chw.write_energy_pb,
+        e_level_leak=chw.mem_leakage * perf.runtime,
+        e_comp_dyn=ms.comp_ops * chw.energy_per_flop,
+        e_comp_leak=chw.comp_leakage * perf.runtime,
+    )
+    return perf, extras
 
 
 def simulate_stacked(

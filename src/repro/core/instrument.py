@@ -1,0 +1,50 @@
+"""Trace-count instrumentation for the compiled-program cache.
+
+JAX re-executes a function's Python body only when it *traces* (compiles) a
+new program; steady-state dispatches replay the cached executable without
+touching Python.  A counter bumped at the top of a jitted body is therefore
+an exact retrace probe: it increments once per compilation and never on a
+cache hit.
+
+The engine entry points (``dopt._dopt_step``, ``popsim._member_step``) and
+every :class:`repro.api.Session` program call :func:`count_trace` with a tag;
+``Session.stats`` and the cache tests read the counters back.  This is the
+mechanism behind the façade's serving guarantee — "warm same-bucket calls
+never retrace" is asserted, not assumed.
+"""
+from __future__ import annotations
+
+from collections import Counter
+
+_counts: Counter = Counter()
+
+
+def count_trace(tag: str) -> None:
+    """Record one trace of the program ``tag``.  Call this at the top of a
+    jit-compiled function body: it runs at trace time only."""
+    _counts[tag] += 1
+
+
+def trace_count(tag: str | None = None, prefix: str | None = None) -> int:
+    """Total traces recorded for ``tag``, for all tags starting with
+    ``prefix``, or for everything."""
+    if tag is not None:
+        return _counts[tag]
+    if prefix is not None:
+        return sum(v for k, v in _counts.items() if k.startswith(prefix))
+    return sum(_counts.values())
+
+
+def snapshot() -> dict:
+    """Immutable copy of all counters (for before/after deltas in tests)."""
+    return dict(_counts)
+
+
+def reset(prefix: str | None = None) -> None:
+    """Clear counters (optionally only those under ``prefix``).  Test-only:
+    resetting does not un-compile anything."""
+    if prefix is None:
+        _counts.clear()
+    else:
+        for k in [k for k in _counts if k.startswith(prefix)]:
+            del _counts[k]

@@ -205,16 +205,18 @@ def _vertex_intrinsics(chw: ConcreteHW, g: Graph, cfg: MapperCfg) -> dict:
         t_onchip=t_onchip,
         t_main=t_main,
         t_core=t_core,
+        t_lvl=t_lvl,
         used_bw=used_bw,
         bw_x=bw_x,
         active=active.astype(jnp.float32),
     )
 
 
-def _vertex_finish(chw: ConcreteHW, g: Graph, cfg: MapperCfg, iv: dict,
-                   occ_prev: jax.Array, bw_prev: jax.Array) -> MapState:
-    """Gates, exposed time and cycle counts — elementwise from the prefix
-    carries — then the reductions into MapState."""
+def _vertex_exec(chw: ConcreteHW, g: Graph, cfg: MapperCfg, iv: dict,
+                 occ_prev: jax.Array, bw_prev: jax.Array) -> dict:
+    """Per-vertex gates, exposed time and cycles — elementwise from the
+    prefix carries.  Shared by the MapState reduction (:func:`_vertex_finish`)
+    and the per-vertex diagnostics (:func:`map_workload_breakdown`)."""
     freq = chw.frequency
 
     # ---------------- prefetch / streaming gates (Alg. 7) -------------------
@@ -235,8 +237,15 @@ def _vertex_finish(chw: ConcreteHW, g: Graph, cfg: MapperCfg, iv: dict,
     # forward via STE): decode-scale vertices cost whole cycles
     per_tile_cyc = (iv["t_core"] + t_main_exposed) * freq / iv["tiles"]
     t_vertex = iv["tiles"] * ceil_ste(per_tile_cyc) / freq * iv["active"]
+    return dict(t_vertex=t_vertex, cycles_v=t_vertex * freq, t_main_exposed=t_main_exposed)
 
-    cycles_v = t_vertex * freq
+
+def _vertex_finish(chw: ConcreteHW, g: Graph, cfg: MapperCfg, iv: dict,
+                   occ_prev: jax.Array, bw_prev: jax.Array) -> MapState:
+    """The reductions into MapState, from the shared per-vertex execution."""
+    ex = _vertex_exec(chw, g, cfg, iv, occ_prev, bw_prev)
+    t_main_exposed = ex["t_main_exposed"]
+    cycles_v = ex["cycles_v"]
     total_cyc = jnp.sum(cycles_v)
     return MapState(
         cycles=total_cyc,
@@ -307,8 +316,9 @@ def minaffine_prefix_assoc(decay: float, add: jax.Array, cap: jax.Array) -> jax.
     return jnp.minimum(b, c)  # applied to s0 = 0
 
 
-def _map_workload_assoc(chw: ConcreteHW, g: Graph, cfg: MapperCfg) -> MapState:
-    iv = _vertex_intrinsics(chw, g, cfg)
+def _carry_prefixes(chw: ConcreteHW, cfg: MapperCfg, iv: dict) -> tuple[jax.Array, jax.Array]:
+    """The two Alg.-7 carries as exclusive prefixes (pre-vertex states),
+    honoring the pallas opt-in for the bw-EMA."""
     occ_after = minaffine_prefix_assoc(_OCC_DECAY, iv["alloc_gbuf"], chw.capacity[_GBUF])
     if cfg.scan_impl == "pallas":
         from repro.kernels.sscan import affine_scan
@@ -316,7 +326,50 @@ def _map_workload_assoc(chw: ConcreteHW, g: Graph, cfg: MapperCfg) -> MapState:
         bw_after = affine_scan(_BW_DECAY, 0.2 * iv["bw_x"])
     else:
         bw_after = affine_prefix_assoc(_BW_DECAY, 0.2 * iv["bw_x"])
-    return _vertex_finish(chw, g, cfg, iv, _exclusive(occ_after), _exclusive(bw_after))
+    return _exclusive(occ_after), _exclusive(bw_after)
+
+
+def _map_workload_assoc(chw: ConcreteHW, g: Graph, cfg: MapperCfg) -> MapState:
+    iv = _vertex_intrinsics(chw, g, cfg)
+    occ_prev, bw_prev = _carry_prefixes(chw, cfg, iv)
+    return _vertex_finish(chw, g, cfg, iv, occ_prev, bw_prev)
+
+
+def map_workload_breakdown(chw: ConcreteHW, g: Graph, cfg: MapperCfg = MapperCfg()) -> dict:
+    """Per-vertex / per-level mapping diagnostics (the ``explain`` path).
+
+    Runs the associative formulation's per-vertex pipeline but returns the
+    arrays *before* the MapState reductions:
+
+      * ``time_v`` / ``cycles_v`` [V] — each vertex's wall time and cycles
+        (padding vertices are exactly zero);
+      * ``t_comp_v`` [V] — compute-critical seconds per vertex;
+      * ``t_main_exposed_v`` [V] — main-memory time not hidden by prefetch;
+      * ``tiles_v`` [V] — MAPVERTEX split counts;
+      * ``t_level`` [N_MEM] — total demanded (no-overlap) transfer time per
+        memory level;
+      * ``active`` [V] — 1.0 for real vertices, 0.0 for padding.
+
+    Consistency with :func:`map_workload`: for ``scan_impl`` "auto" (V >=
+    32, the façade's bucketed case), "assoc" and "pallas" the prefixes are
+    the *same computation*, so the per-vertex cycles sum to
+    ``MapState.cycles`` exactly.  Under the sequential reference
+    (``"ref"``) the arrays come from the associative formulation and match
+    to the formulations' tested equivalence (tests/test_mapper_equiv.py),
+    not bit-exactly.  Differentiable like everything else in the mapper.
+    """
+    iv = _vertex_intrinsics(chw, g, cfg)
+    occ_prev, bw_prev = _carry_prefixes(chw, cfg, iv)
+    ex = _vertex_exec(chw, g, cfg, iv, occ_prev, bw_prev)
+    return dict(
+        time_v=ex["t_vertex"],
+        cycles_v=ex["cycles_v"],
+        t_comp_v=iv["t_comp"] * iv["active"],
+        t_main_exposed_v=ex["t_main_exposed"] * iv["active"],
+        tiles_v=iv["tiles"] * iv["active"],
+        t_level=jnp.sum(iv["t_lvl"] * iv["active"][:, None], axis=0),
+        active=iv["active"],
+    )
 
 
 def map_workload_scan(chw: ConcreteHW, g: Graph, cfg: MapperCfg = MapperCfg()) -> MapState:

@@ -50,6 +50,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.core import instrument
 from repro.core.dhdl import load_arch, serialize_arch
 from repro.core.dopt import adam_init, adam_update, from_log, to_log
 from repro.core.dsim import (
@@ -174,6 +175,7 @@ def _member_step(tech_z, arch_z, tstate, astate, weights, area_budget, power_bud
     """One epoch of one member — mirrors dopt._dopt_step exactly (same loss
     for a one-hot mix, same Adam, same in-jit log-space Alg.-6 clamp), which
     is what the population-vs-sequential equivalence tests pin."""
+    instrument.count_trace("popsim._member_step")  # retrace probe (trace-time only)
 
     def loss_fn(tz, az):
         return mixed_log_objective(
@@ -373,10 +375,14 @@ def pareto_dse(
     the seed designs, as benchmarks/bench_pareto.py does) when tracking
     hypervolume as a trend metric; the box used is always recorded in
     ``hv_lo``/``hv_ref``.
+
+    ``graphs`` may also be an already ``Graph.stack()``-ed workload set
+    (leading [W] axis) — the façade passes pre-bucketed stacks.
     """
     if isinstance(graphs, Graph):
-        graphs = [graphs]
-    gstack = Graph.stack(list(graphs))
+        gstack = graphs if graphs.n_comp.ndim == 3 else Graph.stack([graphs])
+    else:
+        gstack = Graph.stack(list(graphs))
     key = jax.random.PRNGKey(key) if isinstance(key, int) else key
     k_seed, k_mix = jax.random.split(key)
 

@@ -1,1 +1,7 @@
-from repro.serving.engine import Engine, Request  # noqa: F401
+from repro.serving.engine import (  # noqa: F401
+    DesignQuery,
+    DesignReply,
+    DesignService,
+    Engine,
+    Request,
+)

@@ -1,0 +1,203 @@
+"""Golden pin of the public façade surface (tier-1).
+
+The façade is the suite's served API: accidental renames, dropped exports
+or result-dataclass field changes are breaking changes for every client,
+so the exact surface is pinned here.  If a failure is *intentional*, update
+the goldens in the same PR that changes the surface — and the docs
+(docs/api.md, README.md) with them.
+"""
+import dataclasses
+import inspect
+
+import repro
+import repro.api as api
+from repro.core import report
+
+
+def fields(cls) -> tuple[str, ...]:
+    return tuple(f.name for f in dataclasses.fields(cls))
+
+
+# --------------------------------------------------------------------------- #
+# module exports
+# --------------------------------------------------------------------------- #
+
+API_ALL = (
+    "Workload",
+    "Architecture",
+    "Session",
+    "CacheStats",
+    "SimReport",
+    "OptResult",
+    "FrontierResult",
+    "Attribution",
+    "Graph",
+    "MapperCfg",
+    "ArchParams",
+    "ArchSpec",
+    "TechParams",
+    "PerfEstimate",
+    "PARETO_METRICS",
+    "get_workload",
+)
+
+TOP_LEVEL = (
+    "__version__",
+    "Session",
+    "Architecture",
+    "Workload",
+    "CacheStats",
+    "SimReport",
+    "OptResult",
+    "FrontierResult",
+    "Attribution",
+    "Graph",
+    "MapperCfg",
+    "ArchParams",
+    "ArchSpec",
+    "TechParams",
+    "get_workload",
+)
+
+
+def test_api_module_exports():
+    assert tuple(api.__all__) == API_ALL
+    for name in API_ALL:
+        assert getattr(api, name) is not None
+
+
+def test_top_level_lazy_exports():
+    assert tuple(repro.__all__) == TOP_LEVEL
+    for name in TOP_LEVEL:
+        assert getattr(repro, name) is not None
+    assert repro.Session is api.Session
+    assert isinstance(repro.__version__, str) and repro.__version__[0].isdigit()
+
+
+def test_top_level_deprecated_shims_warn_and_forward():
+    import importlib
+    import warnings
+
+    import repro.core.dsim as dsim
+
+    # the shim warns; the engine spelling stays warning-free (it's the oracle)
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        fn = repro.simulate
+    assert fn is dsim.simulate
+    assert any(issubclass(w.category, DeprecationWarning) for w in rec)
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        importlib.reload(dsim)
+    assert not rec
+
+
+# --------------------------------------------------------------------------- #
+# result dataclasses: frozen, with pinned fields
+# --------------------------------------------------------------------------- #
+
+REPORT_FIELDS = {
+    report.Attribution: ("parameter", "elasticity"),
+    report.MemoryLevelReport: (
+        "level",
+        "reads_bytes",
+        "writes_bytes",
+        "transfer_time_s",
+        "dynamic_energy_j",
+        "leakage_energy_j",
+        "bw_utilization",
+    ),
+    report.ComputeClassReport: ("unit", "flops", "dynamic_energy_j", "leakage_energy_j"),
+    report.VertexReport: ("name", "time_s", "energy_j", "time_share"),
+    report.WorkloadReport: (
+        "label",
+        "runtime_s",
+        "energy_j",
+        "power_w",
+        "edp",
+        "cycles",
+        "energy_mem_j",
+        "energy_comp_j",
+        "energy_leak_j",
+        "levels",
+        "compute",
+        "vertices",
+    ),
+    report.SimReport: ("architecture", "objective", "area_mm2", "workloads", "attribution"),
+    report.OptResult: (
+        "objective",
+        "opt_over",
+        "epochs",
+        "improvement",
+        "objective_history",
+        "importance",
+        "baseline",
+        "optimized",
+        "dhd",
+    ),
+    report.FrontierPoint: (
+        "index",
+        "seed",
+        "weights",
+        "time_s",
+        "energy_j",
+        "area_mm2",
+        "power_w",
+        "edp",
+        "dhd",
+    ),
+    report.FrontierResult: (
+        "metrics",
+        "population",
+        "epochs",
+        "feasible",
+        "hypervolume",
+        "area_budget",
+        "power_budget",
+        "front",
+        "raw",
+    ),
+}
+
+
+def test_report_dataclass_fields_pinned():
+    for cls, want in REPORT_FIELDS.items():
+        assert fields(cls) == want, f"{cls.__name__} fields changed"
+        assert cls.__dataclass_params__.frozen, f"{cls.__name__} must be frozen"
+
+
+def test_report_methods_pinned():
+    for cls in (report.SimReport, report.OptResult, report.FrontierResult):
+        assert callable(getattr(cls, "to_json"))
+    for cls in (report.OptResult, report.FrontierResult):
+        assert callable(getattr(cls, "to_dhd"))
+    for prop in ("runtime_s", "energy_j", "power_w", "edp"):
+        assert isinstance(getattr(report.SimReport, prop), property)
+
+
+# --------------------------------------------------------------------------- #
+# façade types: pinned methods and signatures
+# --------------------------------------------------------------------------- #
+
+SESSION_METHODS = ("simulate", "explain", "optimize", "frontier", "tech_targets", "perf")
+
+
+def test_session_surface():
+    for name in SESSION_METHODS:
+        assert callable(getattr(api.Session, name)), f"Session.{name} missing"
+    assert isinstance(api.Session.stats, property)
+    sig = inspect.signature(api.Session.optimize)
+    for p in ("objective", "steps", "lr", "opt_over", "architecture"):
+        assert p in sig.parameters
+    sig = inspect.signature(api.Session.frontier)
+    for p in ("seeds", "population", "steps", "metrics", "area_budget", "power_budget"):
+        assert p in sig.parameters
+    assert fields(api.CacheStats) == ("programs", "hits", "misses", "traces")
+
+
+def test_workload_architecture_surface():
+    for prop in ("bucket", "stacked", "n_workloads"):
+        assert hasattr(api.Workload, prop)
+    for prop in ("name", "spec", "arch", "tech", "compiled"):
+        assert isinstance(getattr(api.Architecture, prop), property)
+    assert callable(api.Architecture.to_dhd)

@@ -1,5 +1,6 @@
 """Dev tool: run a reduced-config forward+loss+prefill+decode for all archs,
-then smoke the examples' Pareto-DSE path (optimize_hw.pareto_frontier) at toy
+smoke the façade (Session simulate/explain/optimize + warm-cache check),
+then the examples' Pareto-DSE path (optimize_hw.pareto_frontier) at toy
 scale.  ``--skip-dse`` runs the model matrix only."""
 import importlib.util
 import os
@@ -12,6 +13,27 @@ import numpy as np
 sys.path.insert(0, "src")
 from repro.configs import all_archs, get_config
 from repro.models import build_model
+
+
+def smoke_session():
+    """The front door end-to-end: every Session method returns a sane,
+    explainable report and the warm path never retraces."""
+    from repro import Session
+
+    sess = Session("edge")
+    rep = sess.simulate("lstm")
+    assert rep.workloads[0].runtime_s > 0 and rep.area_mm2 > 0
+    assert abs(sum(v.time_s for v in rep.workloads[0].vertices) - rep.runtime_s) < 1e-4 * rep.runtime_s
+    exp = sess.explain("lstm")
+    assert exp.attribution and exp.bottlenecks(1)[0].parameter
+    opt = sess.optimize("lstm", steps=8, lr=0.05)
+    assert opt.improvement > 1.0, f"optimize made the design worse: {opt.improvement}"
+    assert opt.to_dhd().startswith("arch ")
+    t0 = sess.stats.traces
+    sess.simulate("merge_sort")  # same shape bucket: must be warm
+    assert sess.stats.traces == t0, "warm same-bucket simulate retraced"
+    print(f"session smoke: {sess.stats.programs} programs, "
+          f"{sess.stats.traces} traces, warm path clean  OK")
 
 
 def smoke_pareto_example():
@@ -61,6 +83,7 @@ def main():
             assert jnp.isfinite(logits2).all(), arch
         print(f"{arch:28s} loss={float(loss):.4f}  params={m.param_count():,}  OK")
     if "--skip-dse" not in sys.argv:
+        smoke_session()
         smoke_pareto_example()
 
 
