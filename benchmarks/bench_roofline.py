@@ -1,70 +1,72 @@
-"""§Roofline: read the dry-run artifacts (results/dryrun/*.json) and emit the
-three-term roofline table per (arch x shape x mesh):
+"""§Roofline: façade-served roofline placements for the 11 DFG workloads.
 
-  t_compute    = HLO_FLOPs_per_device / peak_FLOPs          (197 TF bf16)
-  t_memory     = HLO_bytes_per_device / HBM_bw              (819 GB/s)
-  t_collective = link_bytes_per_device / link_bw            (~50 GB/s ICI)
+For each (architecture x workload) the classic log-log placement:
 
-plus MODEL_FLOPS = 6*N(_active)*D (2*N*D for inference) and the useful-
-compute ratio MODEL_FLOPS / HLO_FLOPs (catches remat/redundancy waste),
-and the dominant-term bottleneck tag."""
+  OI          = FLOPs / mainMem bytes moved      (operational intensity)
+  ridge_oi    = peak_FLOP/s / DRAM_bw            (the machine's ridge point)
+  attainable  = min(peak, OI * DRAM_bw)          (the roofline itself)
+  achieved    = FLOPs / simulated runtime
+  bottleneck  = memory if OI < ridge_oi else compute
+
+Peaks come from the design point itself (``Architecture.peaks()`` — DGen's
+specialized ConcreteHW at the timing-feasible clock), traffic and runtime
+from one batched ``Session.simulate`` over all 11 workloads stacked into a
+single shape bucket (one compile, one dispatch per architecture).
+
+The payload is guaranteed non-empty: an empty roofline is a harness bug
+(this bench once read a results directory that no longer existed and
+silently wrote ``[]``), so ``run`` hard-fails rather than save it.
+"""
 from __future__ import annotations
 
-import glob
-import json
-import os
+from benchmarks.common import emit, save_json
+from repro.api import Architecture, Session, Workload
+from repro.workloads import WORKLOAD_FAMILIES
 
-from benchmarks.common import RESULTS_DIR, emit, save_json
-from repro.configs import SHAPES, get_config
-from repro.launch.dryrun import HBM_BW, LINK_BW, PEAK_FLOPS
-
-
-def model_flops_per_device(arch: str, shape_name: str, chips: int) -> float:
-    cfg = get_config(arch)
-    shape = SHAPES[shape_name]
-    n = cfg.active_param_count()
-    if shape.kind == "train":
-        tokens = shape.global_batch * shape.seq_len
-        return 6.0 * n * tokens / chips
-    if shape.kind == "prefill":
-        tokens = shape.global_batch * shape.seq_len
-        return 2.0 * n * tokens / chips
-    return 2.0 * n * shape.global_batch / chips  # decode: one token/slot
+WORKLOADS = tuple(w for fam in WORKLOAD_FAMILIES.values() for w in fam)
+ARCHS = ("base", "edge", "datacenter")
 
 
-def run(dryrun_dir: str | None = None, quick: bool = False) -> dict:
-    d = dryrun_dir
-    if d is None:  # prefer the corrected baseline sweep
-        for cand in ("dryrun_base", "dryrun"):
-            p = os.path.join(RESULTS_DIR, cand)
-            if os.path.isdir(p) and glob.glob(os.path.join(p, "*.json")):
-                d = p
-                break
-        else:
-            d = os.path.join(RESULTS_DIR, "dryrun")
+def run(quick: bool = False) -> dict:
+    archs = ARCHS[:1] if quick else ARCHS
+    w = Workload(list(WORKLOADS))
     rows = []
-    for fn in sorted(glob.glob(os.path.join(d, "*.json"))):
-        r = json.load(open(fn))
-        if r.get("skipped") or not r.get("ok") or "roofline" not in r:
-            continue
-        if "flops_per_device" not in r:
-            continue
-        tc = r["flops_per_device"] / PEAK_FLOPS
-        tm = r["bytes_per_device"] / HBM_BW
-        tl = r.get("collectives", {}).get("total_bytes", 0) / LINK_BW
-        bound = max((tc, "compute"), (tm, "memory"), (tl, "collective"))[1]
-        mf = model_flops_per_device(r["arch"], r["shape"], r["chips"])
-        step = max(tc, tm, tl)
-        row = dict(
-            arch=r["arch"], shape=r["shape"], mesh=r["mesh"],
-            t_compute=f"{tc:.3e}", t_memory=f"{tm:.3e}", t_collective=f"{tl:.3e}",
-            bottleneck=bound,
-            useful_ratio=round(mf / max(r["flops_per_device"], 1.0), 3),
-            mfu_bound=round(mf / PEAK_FLOPS / max(step, 1e-12), 4),
-            hbm_gb=r.get("hbm_per_device_gb"),
+    for arch_name in archs:
+        a = Architecture(arch_name)
+        peaks = a.peaks()
+        peak, bw = peaks["peak_flops"], peaks["mem_bw"]["mainMem"]
+        ridge = peak / bw
+        rep = Session(a).simulate(w)
+        for g, wr in zip(w.graphs, rep.workloads):
+            flops = float(g.total_flops)
+            main = next(lv for lv in wr.levels if lv.level == "mainMem")
+            dram_bytes = main.reads_bytes + main.writes_bytes
+            oi = flops / max(dram_bytes, 1.0)
+            attainable = min(peak, oi * bw)
+            achieved = flops / max(wr.runtime_s, 1e-30)
+            row = dict(
+                arch=arch_name,
+                workload=wr.label,
+                flops=flops,
+                dram_bytes=dram_bytes,
+                oi=round(oi, 4),
+                ridge_oi=round(ridge, 4),
+                bottleneck="memory" if oi < ridge else "compute",
+                t_compute=f"{flops / peak:.3e}",
+                t_memory=f"{dram_bytes / bw:.3e}",
+                runtime_s=f"{wr.runtime_s:.3e}",
+                peak_flops=f"{peak:.3e}",
+                attainable_flops=f"{attainable:.3e}",
+                achieved_flops=f"{achieved:.3e}",
+                utilization=round(achieved / max(attainable, 1e-30), 4),
+            )
+            rows.append(row)
+            emit("roofline", row)
+    if len(rows) != len(archs) * len(WORKLOADS):
+        raise SystemExit(
+            f"bench_roofline: expected {len(archs) * len(WORKLOADS)} placements, "
+            f"got {len(rows)} — refusing to save a partial/empty roofline"
         )
-        rows.append(row)
-        emit("roofline", row)
     save_json("roofline", rows, quick=quick)
     return {"rows": rows}
 

@@ -63,8 +63,10 @@ import math
 from dataclasses import dataclass
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
+from repro.core import dgen as _dgen
 from repro.core import dopt as _dopt
 from repro.core import instrument
 from repro.core import popsim as _popsim
@@ -308,6 +310,24 @@ class Architecture:
     def to_dhd(self) -> str:
         """Canonical ``.dhd`` text of this design (round-trips bit-exactly)."""
         return serialize_arch(name=self.name, spec=self.spec, arch=self.arch, tech=self.tech)
+
+    def peaks(self) -> dict:
+        """Machine peaks of this design point — the roofline axes.
+
+        Evaluates the hardware model (DGen ``specialize``) and returns
+        ``peak_flops`` (FLOP/s summed over enabled compute classes at the
+        timing-feasible clock), ``mem_bw`` (bytes/s per memory level, keyed
+        by :data:`MEM_CLS` name) and ``frequency`` (Hz).  Host floats — this
+        is reporting surface, not a traced program.
+        """
+        chw = _dgen.specialize(self.tech, self.arch, self.spec)
+        freq = float(np.asarray(chw.frequency))
+        bw = np.asarray(chw.mem_bw)
+        return {
+            "peak_flops": float(np.sum(np.asarray(chw.flops_per_cycle))) * freq,
+            "mem_bw": {lvl: float(bw[i]) for i, lvl in enumerate(MEM_CLS)},
+            "frequency": freq,
+        }
 
     def __repr__(self) -> str:
         return f"Architecture({self.name!r})"
@@ -642,6 +662,87 @@ class Session:
             front=front,
             raw=res,
         )
+
+    # --------------------------------------------------------- introspection --
+    def trace_programs(self, workload, *, objective: str = "edp", architecture=None) -> dict:
+        """Abstractly lower the four served program kinds to jaxprs.
+
+        Returns ``{"simulate": ..., "explain": ..., "optimize": ...,
+        "frontier": ...}`` — each a ``ClosedJaxpr`` from ``jax.make_jaxpr``
+        over *the same engine functions the session compiles and serves*
+        (``simulate_stacked``; the explain gradient; one DOpt epoch, i.e.
+        the body the fused chunk scans; the vmapped popsim member step over
+        a 2-member population).  Nothing is compiled or executed — this is
+        the static program view ``tools/dragonlint`` Pass B inspects for
+        transfers, dtype promotions, folded constants and seam-unsafe
+        primitives.
+
+        Tracing is a real trace: the engines' retrace probes
+        (``dopt._dopt_step`` / ``popsim._member_step``) each bump once per
+        call.  Benchmarks gate on *deltas* of those counters, so calling
+        this between measurements is safe; don't call it inside one.
+        """
+        w, a = self._workload(workload), self._arch(architecture)
+        spec, mcfg = a.spec, self.mcfg
+        gstack = w.stacked
+        out: dict = {}
+
+        def sim(tech, arch, g):
+            return simulate_stacked(tech, arch, g, spec, mcfg)
+
+        out["simulate"] = jax.make_jaxpr(sim)(a.tech, a.arch, gstack)
+
+        def expl(tech, arch, g):
+            def loss(tz, az):
+                val, _ = stacked_log_objective(
+                    from_log(tz), from_log(az), g, objective, spec=spec, mcfg=mcfg
+                )
+                return val
+
+            return jax.grad(loss, argnums=(0, 1))(to_log(tech), to_log(arch))
+
+        out["explain"] = jax.make_jaxpr(expl)(a.tech, a.arch, gstack)
+
+        # one DOpt epoch with the exact state/mix layout optimize() scans
+        # (opt_over="both": no type logits, placeholder ystate)
+        tech_z, arch_z = to_log(a.tech), to_log(a.arch)
+        state = (
+            tech_z, arch_z, None,
+            _dopt.adam_init(tech_z), _dopt.adam_init(arch_z),
+            _dopt.adam_init(jnp.zeros(1)),
+        )
+        mix = (
+            jnp.zeros(len(PARETO_METRICS)), jnp.float32(jnp.inf),
+            jnp.float32(jnp.inf), jnp.float32(1.0),
+        )
+
+        def opt(st, g, lr, mx):
+            return _dopt._dopt_step(st, g, lr, mx, spec, objective, None, "both", mcfg)
+
+        out["optimize"] = jax.make_jaxpr(opt)(state, gstack, jnp.float32(0.05), mix)
+
+        # the population chunk's member axis, minimally populated (P=2)
+        pop = 2
+        ptz = jax.tree.map(lambda x: jnp.stack([x] * pop), tech_z)
+        paz = jax.tree.map(lambda x: jnp.stack([x] * pop), arch_z)
+        tstate = jax.vmap(_dopt.adam_init)(ptz)
+        astate = jax.vmap(_dopt.adam_init)(paz)
+        weights = jnp.zeros((pop, len(PARETO_METRICS)))
+        budgets = jnp.full((pop,), jnp.inf)
+
+        def front(tz, az, ts, as_, wts, ab, pb, g, lr, pw):
+            def member(tz1, az1, ts1, as1, w1, ab1, pb1):
+                return _popsim._member_step(
+                    tz1, az1, ts1, as1, w1, ab1, pb1, g, lr, pw, spec, mcfg, "both"
+                )
+
+            return jax.vmap(member)(tz, az, ts, as_, wts, ab, pb)
+
+        out["frontier"] = jax.make_jaxpr(front)(
+            ptz, paz, tstate, astate, weights, budgets, budgets,
+            gstack, jnp.float32(0.1), jnp.float32(1.0),
+        )
+        return out
 
     # -------------------------------------------------------------- report --
     def _build_report(self, a: Architecture, w: Workload, perfs, extras) -> SimReport:

@@ -179,7 +179,15 @@ def test_report_methods_pinned():
 # façade types: pinned methods and signatures
 # --------------------------------------------------------------------------- #
 
-SESSION_METHODS = ("simulate", "explain", "optimize", "frontier", "tech_targets", "perf")
+SESSION_METHODS = (
+    "simulate",
+    "explain",
+    "optimize",
+    "frontier",
+    "tech_targets",
+    "perf",
+    "trace_programs",
+)
 
 
 def test_session_surface():
@@ -201,3 +209,10 @@ def test_workload_architecture_surface():
     for prop in ("name", "spec", "arch", "tech", "compiled"):
         assert isinstance(getattr(api.Architecture, prop), property)
     assert callable(api.Architecture.to_dhd)
+    assert callable(api.Architecture.peaks)
+
+
+def test_trace_programs_signature():
+    sig = inspect.signature(api.Session.trace_programs)
+    assert "objective" in sig.parameters
+    assert "architecture" in sig.parameters

@@ -1,0 +1,194 @@
+"""Tier-1: the trace-time probe (core/instrument.py).
+
+This counter is the runtime oracle behind the serving contract — every
+"never retraces" claim (Session.stats, bench_api's hard gates, dragonlint's
+static analysis) is validated against it — so its semantics get pinned
+here: bumps happen at trace time only, nested jit traces both bodies,
+vmap/grad trace without caching, per-Session prefixes stay isolated
+(session1 vs session10), and reset is prefix-scoped.
+"""
+from __future__ import annotations
+
+import uuid
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import instrument
+
+
+def _tag() -> str:
+    return f"test.instrument.{uuid.uuid4().hex[:8]}"
+
+
+class TestCountSemantics:
+    def test_counts_traces_not_calls(self):
+        tag = _tag()
+
+        @jax.jit
+        def f(x):
+            instrument.count_trace(tag)
+            return x * 2.0
+
+        assert instrument.trace_count(tag) == 0
+        f(jnp.float32(1.0))
+        assert instrument.trace_count(tag) == 1
+        for _ in range(5):  # warm dispatches replay the executable
+            f(jnp.float32(3.0))
+        assert instrument.trace_count(tag) == 1
+
+    def test_new_shape_or_dtype_retraces(self):
+        tag = _tag()
+
+        @jax.jit
+        def f(x):
+            instrument.count_trace(tag)
+            return x + 1
+
+        f(jnp.zeros(3))
+        f(jnp.zeros(3))
+        assert instrument.trace_count(tag) == 1
+        f(jnp.zeros(4))  # new shape -> new program
+        assert instrument.trace_count(tag) == 2
+        f(jnp.zeros(4, jnp.int32))  # new dtype -> new program
+        assert instrument.trace_count(tag) == 3
+
+    def test_static_arg_retraces_traced_arg_does_not(self):
+        tag = _tag()
+
+        from functools import partial
+
+        @partial(jax.jit, static_argnames=("k",))
+        def f(x, k):
+            instrument.count_trace(tag)
+            return x * k
+
+        f(jnp.float32(1.0), k=2)
+        f(jnp.float32(5.0), k=2)  # value change on traced arg: no retrace
+        assert instrument.trace_count(tag) == 1
+        f(jnp.float32(1.0), k=3)  # static change: retrace
+        assert instrument.trace_count(tag) == 2
+
+    def test_nested_jit_bumps_both_counters_once(self):
+        inner_tag, outer_tag = _tag(), _tag()
+
+        @jax.jit
+        def inner(x):
+            instrument.count_trace(inner_tag)
+            return x + 1.0
+
+        @jax.jit
+        def outer(x):
+            instrument.count_trace(outer_tag)
+            return inner(x) * 2.0
+
+        outer(jnp.float32(1.0))
+        assert instrument.trace_count(outer_tag) == 1
+        assert instrument.trace_count(inner_tag) == 1
+        outer(jnp.float32(2.0))
+        assert instrument.trace_count(outer_tag) == 1
+        assert instrument.trace_count(inner_tag) == 1
+        # the inner program was traced inside outer's trace; calling it
+        # standalone hits its own jit cache entry only if shapes match the
+        # nested trace's abstract values — same shape here, so no new trace
+        inner(jnp.float32(3.0))
+        assert instrument.trace_count(inner_tag) <= 2
+
+    def test_grad_and_vmap_trace_without_jit_cache(self):
+        tag = _tag()
+
+        def f(x):
+            instrument.count_trace(tag)
+            return jnp.sum(x * x)
+
+        jax.grad(f)(jnp.float32(2.0))
+        n1 = instrument.trace_count(tag)
+        assert n1 >= 1
+        jax.vmap(f)(jnp.zeros((3, 2)))
+        assert instrument.trace_count(tag) > n1  # un-jitted transforms re-trace
+
+    def test_make_jaxpr_counts_as_a_trace(self):
+        # abstract lowering runs the Python body: dragonlint Pass B bumps
+        # the engine probes, which is why benches must gate on deltas
+        tag = _tag()
+
+        def f(x):
+            instrument.count_trace(tag)
+            return x
+
+        jax.make_jaxpr(f)(jnp.float32(0.0))
+        assert instrument.trace_count(tag) == 1
+
+
+class TestPrefixIsolation:
+    def test_prefix_sums_only_matching_tags(self):
+        base = _tag()
+        instrument.count_trace(f"{base}.a")
+        instrument.count_trace(f"{base}.b")
+        instrument.count_trace(f"{base}.b")
+        assert instrument.trace_count(prefix=f"{base}.") == 3
+        assert instrument.trace_count(tag=f"{base}.b") == 2
+
+    def test_session1_does_not_see_session10(self):
+        # the Session tag scheme ends with "." exactly so numeric suffixes
+        # never alias; pin the property the façade relies on
+        base = _tag()
+        instrument.count_trace(f"{base}1.simulate")
+        instrument.count_trace(f"{base}10.simulate")
+        instrument.count_trace(f"{base}10.report")
+        assert instrument.trace_count(prefix=f"{base}1.") == 1
+        assert instrument.trace_count(prefix=f"{base}10.") == 2
+
+    def test_per_session_cachestats_isolation(self):
+        from repro.api import Session, Workload
+
+        w = Workload("bfs_graph")
+        s1, s2 = Session(), Session()
+        s1.perf(w)
+        assert s1.stats.traces == 1
+        assert s2.stats.traces == 0  # s2 never compiled anything
+        assert s2.stats.programs == 0
+        s2.perf(w)
+        # same bucket+spec: program cache is per-session, so s2 traces its
+        # own program (counter isolation, not executable sharing)
+        assert s2.stats.traces == 1
+        assert s1.stats.traces == 1
+        s1.perf(w)  # warm: no new trace anywhere
+        assert s1.stats.traces == 1
+        assert s1.stats.hits == 1
+
+
+class TestResetAndSnapshot:
+    def test_reset_prefix_scoped(self):
+        a, b = _tag(), _tag()
+        instrument.count_trace(a)
+        instrument.count_trace(b)
+        instrument.reset(prefix=a)
+        assert instrument.trace_count(a) == 0
+        assert instrument.trace_count(b) == 1
+
+    def test_snapshot_is_immutable_copy(self):
+        tag = _tag()
+        instrument.count_trace(tag)
+        snap = instrument.snapshot()
+        assert snap[tag] == 1
+        snap[tag] = 99
+        assert instrument.trace_count(tag) == 1
+
+    def test_reset_does_not_uncompile(self):
+        tag = _tag()
+
+        @jax.jit
+        def f(x):
+            instrument.count_trace(tag)
+            return x - 1.0
+
+        f(jnp.float32(1.0))
+        instrument.reset(prefix=tag)
+        f(jnp.float32(2.0))  # cached executable replays: no re-trace
+        assert instrument.trace_count(tag) == 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(pytest.main([__file__, "-q"]))

@@ -1,122 +1,33 @@
 #!/usr/bin/env python
-"""Lint: examples/benchmarks/tools must consume the façade, not the engines.
+"""API-surface lint — thin shim over ``tools/dragonlint`` (CI-enforced).
 
-The public surface is ``repro.api`` (Session / Architecture / Workload) and
-the report objects; the engine layer (``repro.core.dsim`` / ``dopt`` /
-``popsim`` / ``mapper`` / ``dgen`` / ``refsim``, ``repro.kernels``) is the
-numerical oracle underneath and stays importable — but user-facing code in
-this repo must not quietly bypass the front door, or the façade stops being
-the surface every scaling PR can rely on.  This script fails (exit 1) when
-a scanned file imports an engine module or an engine entry point:
-
-  * ``import repro.core.dsim`` / ``from repro.core.dopt import ...`` — the
-    engine modules themselves (and ``repro.kernels``);
-  * ``from repro.core import simulate, optimize, ...`` — engine functions
-    via the old aggregate surface.
-
-Escape hatch: a line tagged ``# engine-oracle`` is allowed — it declares a
-deliberate baseline/accuracy comparison *against* the façade path (e.g.
-bench_sim_speed's refsim accuracy oracle, bench_pareto's engine-vs-
-sequential throughput comparison).  Tags are counted and listed so new ones
-are visible in review.
-
-Usage: python tools/check_api_surface.py [repo_root]
+The rule now lives in the dragonlint registry as ``api-surface`` (with the
+``stale-oracle-tag`` companion; rationale and examples in docs/lint.md);
+this entry point is kept so existing habits and docs keep working.  Prefer
+``python -m tools.dragonlint --pass a --rules api-surface,stale-oracle-tag``.
 """
 from __future__ import annotations
 
-import re
+import os
 import sys
 from pathlib import Path
 
-SCAN_DIRS = ("examples", "benchmarks", "tools")
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
-ENGINE_MODULES = re.compile(
-    r"repro\.core\.(dsim|dopt|popsim|mapper|dgen|refsim)\b|repro\.kernels\b"
+from tools.dragonlint import render, run_pass_a  # noqa: E402
+from tools.dragonlint.rules_ast import (  # noqa: E402,F401  (legacy re-exports)
+    ENGINE_MODULES,
+    ENGINE_NAMES,
+    FROM_CORE,
+    ORACLE_TAG,
 )
-ENGINE_NAMES = (
-    # engine modules pulled as aliases (`from repro.core import dsim`)
-    "dsim",
-    "dopt",
-    "popsim",
-    "mapper",
-    "dgen",
-    "refsim",
-    "kernels",
-    # engine entry points
-    "simulate",
-    "simulate_chw",
-    "simulate_stacked",
-    "simulate_jit",
-    "simulate_breakdown",
-    "stacked_log_objective",
-    "stacked_log_metrics",
-    "mixed_log_objective",
-    "optimize",
-    "derive_tech_targets",
-    "pareto_dse",
-    "population_chunk",
-    "seed_population",
-    "sample_objective_mixes",
-    "init_population_state",
-    "specialize",
-    "map_workload",
-    "map_workload_scan",
-)
-FROM_CORE = re.compile(r"^\s*from\s+repro\.core\s+import\s+(.+)$")
-ORACLE_TAG = "# engine-oracle"
 
 
 def check(root: Path) -> int:
-    violations, tagged = [], []
-    for d in SCAN_DIRS:
-        for path in sorted((root / d).rglob("*.py")):
-            rel = path.relative_to(root).as_posix()
-            if rel == "tools/check_api_surface.py":
-                continue  # this file spells the forbidden patterns in its docs
-            lines = path.read_text().splitlines()
-            i = 0
-            while i < len(lines):
-                lineno, line = i + 1, lines[i]
-                i += 1
-                # fold a parenthesized `from X import (...)` statement into
-                # one logical line so wrapped imports can't slip through
-                stmt = line
-                if re.match(r"^\s*from\s+\S+\s+import\s*\(", line) and ")" not in line:
-                    while i < len(lines) and ")" not in lines[i]:
-                        stmt += " " + lines[i]
-                        i += 1
-                    if i < len(lines):
-                        stmt += " " + lines[i]
-                        i += 1
-                hit = None
-                if ENGINE_MODULES.search(stmt) and ("import" in stmt or "from" in stmt):
-                    hit = "engine module"
-                else:
-                    m = FROM_CORE.match(stmt)
-                    if m:
-                        names = {
-                            n.strip().split(" as ")[0]
-                            for n in m.group(1).replace("(", " ").replace(")", " ").split(",")
-                        }
-                        bad = names & set(ENGINE_NAMES)
-                        if bad:
-                            hit = f"engine entry point {sorted(bad)}"
-                if hit is None:
-                    continue
-                if ORACLE_TAG in stmt:
-                    tagged.append(f"{rel}:{lineno}: {line.strip()}")
-                else:
-                    violations.append(f"{rel}:{lineno}: [{hit}] {line.strip()}")
-    if tagged:
-        print(f"declared engine-oracle imports ({len(tagged)} — baselines, allowed):")
-        print("\n".join(f"  {t}" for t in tagged))
-    if violations:
-        print("API-surface violations (use repro.api / repro instead, or tag a")
-        print(f"deliberate oracle comparison with '{ORACLE_TAG}'):")
-        print("\n".join(violations))
-        return 1
-    print(f"api surface clean: {'/'.join(SCAN_DIRS)} consume the façade")
-    return 0
+    findings = run_pass_a(root=Path(root).resolve(),
+                          rules=["api-surface", "stale-oracle-tag"])
+    print(render(findings, "api surface"))
+    return 1 if findings else 0
 
 
 if __name__ == "__main__":

@@ -1,17 +1,11 @@
 #!/usr/bin/env python
-"""Golden-corpus check for the .dhd description language (CI-enforced).
+"""Golden-corpus check for ``.dhd`` — thin shim over ``tools/dragonlint``.
 
-Guards the grammar against silent drift from two directions:
-
-1. VALID corpus — every `.dhd` in the architecture library
-   (src/repro/configs/arch/) must parse, compile to finite positive
-   pytrees, specialize to a finite ConcreteHW, and round-trip bit-exactly
-   through the canonical serializer.
-
-2. INVALID corpus — every `.dhd` under tests/data/dhdl_invalid/ must FAIL
-   to compile, and the DhdlError message must contain the snippet declared
-   in the file's first line (``# expect-error: <snippet>``).  A file that
-   suddenly parses, or errors with a different message, is grammar drift.
+The check now lives in the dragonlint registry as the repo-scope
+``dhdl-corpus`` rule (:mod:`tools.dragonlint.corpus`); this entry point —
+and the ``check_valid_corpus`` / ``check_invalid_corpus`` functions
+``tests/test_dhdl.py`` loads by path — are kept so existing habits keep
+working.  Prefer ``python -m tools.dragonlint --pass a --rules dhdl-corpus``.
 
 Usage: PYTHONPATH=src python tools/check_dhdl_corpus.py
 Exit code 0 = corpus green; 1 = drift (details on stdout).
@@ -19,84 +13,15 @@ Exit code 0 = corpus green; 1 = drift (details on stdout).
 from __future__ import annotations
 
 import os
-import re
 import sys
 
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-import numpy as np  # noqa: E402
-
-INVALID_DIR = os.path.join(os.path.dirname(__file__), "..", "tests", "data", "dhdl_invalid")
-_EXPECT_RE = re.compile(r"#\s*expect-error:\s*(.+)")
-
-
-def check_valid_corpus() -> list[str]:
-    import jax
-
-    from repro.core import dhdl
-
-    failures = []
-    env = dhdl.load_library(refresh=True)
-    if len(env) < 6:
-        failures.append(f"library has only {len(env)} architectures; expected >= 6")
-    for name in sorted(env):
-        try:
-            ca = dhdl.compile_arch(env[name], env)
-            chw = ca.specialize()
-            for leaf in jax.tree.leaves((ca.arch, ca.tech, chw)):
-                a = np.asarray(leaf)
-                if not np.all(np.isfinite(a)):
-                    failures.append(f"{name}: non-finite values in compiled pytrees")
-                    break
-            text = dhdl.serialize_arch(ca)
-            ca2 = dhdl.parse_arch(text, env={})
-            exact = ca2.spec == ca.spec and all(
-                bool(np.array_equal(np.asarray(x), np.asarray(y)))
-                for x, y in zip(
-                    jax.tree.leaves((ca.arch, ca.tech)), jax.tree.leaves((ca2.arch, ca2.tech))
-                )
-            )
-            if not exact:
-                failures.append(f"{name}: serializer round-trip is not bit-exact")
-            elif dhdl.serialize_arch(ca2) != text:
-                failures.append(f"{name}: canonical serialization is not a fixed point")
-            else:
-                print(f"  ok   {name}")
-        except Exception as e:  # noqa: BLE001 - report, don't crash the sweep
-            failures.append(f"{name}: failed to compile: {e}")
-    return failures
-
-
-def check_invalid_corpus() -> list[str]:
-    from repro.core import dhdl
-
-    failures = []
-    files = sorted(f for f in os.listdir(INVALID_DIR) if f.endswith(".dhd"))
-    if not files:
-        return [f"no invalid-corpus files found under {INVALID_DIR}"]
-    for fn in files:
-        src = open(os.path.join(INVALID_DIR, fn)).read()
-        m = _EXPECT_RE.search(src)
-        if not m:
-            failures.append(f"{fn}: missing '# expect-error: <snippet>' directive")
-            continue
-        snippet = m.group(1).strip()
-        try:
-            dhdl.parse_arch(src, filename=fn, env={})
-        except dhdl.DhdlError as e:
-            if snippet in str(e):
-                print(f"  ok   {fn} ({snippet!r})")
-            else:
-                failures.append(
-                    f"{fn}: error message drifted.\n  expected snippet: {snippet!r}\n  got: {e}"
-                )
-        except Exception as e:  # noqa: BLE001 - a non-DhdlError is itself drift
-            failures.append(
-                f"{fn}: raised {type(e).__name__} instead of a located DhdlError: {e}"
-            )
-        else:
-            failures.append(f"{fn}: expected a DhdlError containing {snippet!r}, but it compiled")
-    return failures
+from tools.dragonlint.corpus import (  # noqa: E402,F401  (legacy re-exports)
+    check_invalid_corpus,
+    check_valid_corpus,
+)
 
 
 def main() -> int:

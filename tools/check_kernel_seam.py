@@ -1,48 +1,30 @@
 #!/usr/bin/env python
-"""Lint: version-fragile JAX spellings must stay inside kernels/runtime.py.
+"""Kernel-seam lint — thin shim over ``tools/dragonlint`` (CI-enforced).
 
-The runtime seam (src/repro/kernels/runtime.py) is the only module allowed
-to reference TPU compiler-params classes or the shard-map entry points by
-name — everything else must go through runtime.dragon_pallas_call /
-runtime.spmd_map / runtime.tpu_compiler_params. This script fails (exit 1)
-when a version-fragile spelling appears anywhere else under src/, so a new
-kernel cannot silently reintroduce a fragile call site:
-
-  * ``CompilerParams`` / ``shard_map`` — the renamed APIs themselves;
-  * ``pltpu`` / ``pallas import tpu`` — kernels must use
-    ``runtime.vmem_scratch`` instead of importing the TPU pallas module;
-  * ``pl.pallas_call`` — kernels must use ``runtime.dragon_pallas_call``
-    (interpret auto-fallback + compiler-params construction).
-
-Usage: python tools/check_kernel_seam.py [src_dir]
+The rule now lives in the dragonlint registry as ``kernel-seam`` (rationale
+and examples in docs/lint.md); this entry point is kept so existing habits
+and docs (``python tools/check_kernel_seam.py``) keep working.  Prefer
+``python -m tools.dragonlint --pass a --rules kernel-seam``.
 """
 from __future__ import annotations
 
-import re
+import os
 import sys
 from pathlib import Path
 
-PATTERN = re.compile(
-    r"CompilerParams|shard_map|\bpltpu\b|pallas\s+import\s+tpu|pl\.pallas_call"
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from tools.dragonlint import render, run_pass_a  # noqa: E402
+from tools.dragonlint.rules_ast import (  # noqa: E402,F401  (legacy re-exports)
+    KERNEL_SEAM_ALLOWED as ALLOWED,
+    KERNEL_SEAM_PATTERN as PATTERN,
 )
-ALLOWED = ("kernels/runtime.py",)
 
 
 def check(src_dir: Path) -> int:
-    violations = []
-    for path in sorted(src_dir.rglob("*.py")):
-        rel = path.as_posix()
-        if rel.endswith(ALLOWED):
-            continue
-        for lineno, line in enumerate(path.read_text().splitlines(), 1):
-            if PATTERN.search(line):
-                violations.append(f"{rel}:{lineno}: {line.strip()}")
-    if violations:
-        print("kernel-seam violations (route through repro.kernels.runtime):")
-        print("\n".join(violations))
-        return 1
-    print(f"kernel seam clean: no version-fragile spellings outside {ALLOWED[0]}")
-    return 0
+    findings = run_pass_a(root=Path(src_dir).resolve().parent, rules=["kernel-seam"])
+    print(render(findings, "kernel seam"))
+    return 1 if findings else 0
 
 
 if __name__ == "__main__":

@@ -1,0 +1,22 @@
+"""dragonlint: DRAGON's static-analysis suite.
+
+Pass A — AST/line rules over the source tree (the serving contract plus the
+three absorbed legacy checkers).  Pass B — the jaxpr hazard pass over every
+served ``Session`` program kind x the ``.dhd`` architecture library.
+
+Run ``python -m tools.dragonlint`` from the repo root (docs/lint.md is the
+rule catalog).  Importing this package registers every rule.
+"""
+from tools.dragonlint import corpus, rules_ast  # noqa: F401  (rule registration)
+from tools.dragonlint.engine import (  # noqa: F401
+    ANALYSIS_PATH,
+    REPO_ROOT,
+    RULES,
+    Finding,
+    Rule,
+    lint_source,
+    render,
+    run_pass_a,
+    write_report,
+)
+from tools.dragonlint.rules_jaxpr import run_pass_b  # noqa: F401

@@ -1,0 +1,82 @@
+"""CLI: ``python -m tools.dragonlint [--pass a|b|all] [--files ...]``.
+
+Exit 0 = clean, 1 = findings (details on stdout).  The full run writes
+``results/analysis/dragonlint.json`` next to the bench results; ``--files``
+(the pre-commit mode) runs Pass A file rules on just the named files and
+writes nothing.
+
+Needs ``PYTHONPATH=src`` (or an installed ``repro``) for Pass B and the
+dhdl-corpus rule; pure AST runs (``--pass a --files ...``) work without it.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+# allow `python tools/dragonlint` and pre-commit hooks that bypass -m
+_ROOT = Path(__file__).resolve().parent.parent.parent
+if str(_ROOT) not in sys.path:
+    sys.path.insert(0, str(_ROOT))
+_SRC = _ROOT / "src"
+if str(_SRC) not in sys.path:
+    sys.path.insert(0, str(_SRC))
+
+from tools.dragonlint import engine  # noqa: E402
+from tools.dragonlint.engine import render, run_pass_a, write_report  # noqa: E402
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m tools.dragonlint",
+        description="DRAGON static analysis: AST rules (Pass A) + jaxpr hazard pass (Pass B)",
+    )
+    ap.add_argument("--pass", dest="which", choices=("a", "b", "all"), default="all",
+                    help="which pass to run (default: all)")
+    ap.add_argument("--files", nargs="*", default=None,
+                    help="run Pass A file rules on just these files (pre-commit mode; "
+                         "skips repo-scope rules, Pass B and the JSON report)")
+    ap.add_argument("--rules", default=None,
+                    help="comma-separated rule subset (default: all registered)")
+    ap.add_argument("--workload", default=None,
+                    help="Pass B workload bucket (default: bert_base)")
+    ap.add_argument("--json", dest="json_path", default=None,
+                    help=f"report path (default: {engine.ANALYSIS_PATH})")
+    args = ap.parse_args(argv)
+
+    rules = [r.strip() for r in args.rules.split(",")] if args.rules else None
+    if rules:
+        unknown = [r for r in rules if r not in engine.RULES]
+        if unknown:
+            print(f"unknown rule(s): {unknown}; registered: {sorted(engine.RULES)}")
+            return 2
+
+    rc = 0
+    pass_a: list = []
+    pass_b: dict | None = None
+
+    if args.which in ("a", "all"):
+        pass_a = run_pass_a(files=args.files, rules=rules)
+        print(render(pass_a, "pass A (AST rules)"))
+        rc |= bool(pass_a)
+
+    if args.which in ("b", "all") and args.files is None:
+        from tools.dragonlint.rules_jaxpr import DEFAULT_WORKLOAD, run_pass_b
+
+        pass_b = run_pass_b(workload=args.workload or DEFAULT_WORKLOAD)
+        n = len(pass_b["findings"])
+        print(f"pass B (jaxpr hazards): {pass_b['programs_lowered']} programs lowered "
+              f"({len(pass_b['architectures'])} archs x {len(pass_b['kinds'])} kinds), "
+              f"{n} finding(s)")
+        for f in pass_b["findings"]:
+            print(f"{f['path']}: [{f['rule']}] {f['message']}")
+        rc |= n > 0
+
+    if args.files is None:
+        out = write_report(engine.REPO_ROOT, pass_a, pass_b, args.json_path)
+        print(f"report: {out.relative_to(engine.REPO_ROOT)}")
+    return rc
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

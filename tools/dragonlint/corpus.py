@@ -1,0 +1,110 @@
+"""The ``dhdl-corpus`` repo-scope rule: golden-corpus check for ``.dhd``.
+
+Same two directions the legacy ``tools/check_dhdl_corpus.py`` enforced (that
+script is now a shim over this rule):
+
+1. VALID corpus — every ``.dhd`` in the architecture library compiles to
+   finite pytrees, specializes to a finite ConcreteHW, and round-trips
+   bit-exactly through the canonical serializer (which is also a fixed
+   point).
+2. INVALID corpus — every ``.dhd`` under ``tests/data/dhdl_invalid/`` must
+   fail with a :class:`DhdlError` whose message contains the snippet the
+   file declares via ``# expect-error: <snippet>``.
+
+``repro.core.dhdl`` is the description-language front end, not an engine
+module — the api-surface rule deliberately leaves it callable from tools.
+"""
+from __future__ import annotations
+
+import re
+from pathlib import Path
+from typing import Iterator
+
+from tools.dragonlint.engine import Finding, rule
+
+_EXPECT_RE = re.compile(r"#\s*expect-error:\s*(.+)")
+
+
+def check_valid_corpus() -> list[str]:
+    """Compile + round-trip every library architecture; return failure strings."""
+    import jax
+    import numpy as np
+
+    from repro.core import dhdl
+
+    failures = []
+    env = dhdl.load_library(refresh=True)
+    if len(env) < 6:
+        failures.append(f"library has only {len(env)} architectures; expected >= 6")
+    for name in sorted(env):
+        try:
+            ca = dhdl.compile_arch(env[name], env)
+            chw = ca.specialize()
+            for leaf in jax.tree.leaves((ca.arch, ca.tech, chw)):
+                a = np.asarray(leaf)
+                if not np.all(np.isfinite(a)):
+                    failures.append(f"{name}: non-finite values in compiled pytrees")
+                    break
+            text = dhdl.serialize_arch(ca)
+            ca2 = dhdl.parse_arch(text, env={})
+            exact = ca2.spec == ca.spec and all(
+                bool(np.array_equal(np.asarray(x), np.asarray(y)))
+                for x, y in zip(
+                    jax.tree.leaves((ca.arch, ca.tech)), jax.tree.leaves((ca2.arch, ca2.tech))
+                )
+            )
+            if not exact:
+                failures.append(f"{name}: serializer round-trip is not bit-exact")
+            elif dhdl.serialize_arch(ca2) != text:
+                failures.append(f"{name}: canonical serialization is not a fixed point")
+        except Exception as e:  # noqa: BLE001 - report, don't crash the sweep
+            failures.append(f"{name}: failed to compile: {e}")
+    return failures
+
+
+def check_invalid_corpus(invalid_dir: Path | None = None) -> list[str]:
+    """Every invalid-corpus file must fail with its declared error snippet."""
+    from repro.core import dhdl
+
+    from tools.dragonlint.engine import REPO_ROOT
+
+    invalid_dir = invalid_dir or REPO_ROOT / "tests" / "data" / "dhdl_invalid"
+    failures = []
+    files = sorted(p for p in invalid_dir.glob("*.dhd"))
+    if not files:
+        return [f"no invalid-corpus files found under {invalid_dir}"]
+    for path in files:
+        src = path.read_text()
+        fn = path.name
+        m = _EXPECT_RE.search(src)
+        if not m:
+            failures.append(f"{fn}: missing '# expect-error: <snippet>' directive")
+            continue
+        snippet = m.group(1).strip()
+        try:
+            dhdl.parse_arch(src, filename=fn, env={})
+        except dhdl.DhdlError as e:
+            if snippet not in str(e):
+                failures.append(
+                    f"{fn}: error message drifted.\n  expected snippet: {snippet!r}\n  got: {e}"
+                )
+        except Exception as e:  # noqa: BLE001 - a non-DhdlError is itself drift
+            failures.append(
+                f"{fn}: raised {type(e).__name__} instead of a located DhdlError: {e}"
+            )
+        else:
+            failures.append(f"{fn}: expected a DhdlError containing {snippet!r}, but it compiled")
+    return failures
+
+
+@rule(
+    "dhdl-corpus",
+    doc="the .dhd architecture library must compile and round-trip bit-exactly; "
+        "the invalid corpus must keep failing with its pinned error snippets",
+    scope="repo",
+)
+def dhdl_corpus(root: Path) -> Iterator[Finding]:
+    for msg in check_valid_corpus():
+        yield Finding("dhdl-corpus", "src/repro/configs/arch", 0, msg)
+    for msg in check_invalid_corpus(root / "tests" / "data" / "dhdl_invalid"):
+        yield Finding("dhdl-corpus", "tests/data/dhdl_invalid", 0, msg)

@@ -1,0 +1,217 @@
+"""dragonlint engine: rule registry, suppressions, drivers, reports.
+
+The engine is deliberately small: a rule is a named checker registered in
+:data:`RULES` with a scope — ``file`` rules get ``(rel, text, tree)`` for
+every Python file under their declared ``scan`` prefixes, ``repo`` rules get
+the repo root once.  Rules yield :class:`Finding`s; the engine filters them
+through ``# dragonlint: disable=<rule>`` suppressions (same line, or a
+comment-only line directly above) and renders the human report plus the
+machine-readable ``results/analysis/dragonlint.json``.
+
+Pass A (AST / line rules) lives in :mod:`tools.dragonlint.rules_ast` and
+:mod:`tools.dragonlint.corpus`; Pass B (the jaxpr hazard pass over every
+``Session`` program kind x the ``.dhd`` architecture library) lives in
+:mod:`tools.dragonlint.rules_jaxpr`.  ``python -m tools.dragonlint`` runs
+both; see :mod:`tools.dragonlint.__main__` for the CLI.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import json
+import re
+from dataclasses import dataclass
+from pathlib import Path
+from typing import Callable, Iterable
+
+REPO_ROOT = Path(__file__).resolve().parent.parent.parent
+
+# directories never scanned, wherever a rule points
+_SKIP_PARTS = {"__pycache__", ".git", ".ruff_cache", "results", "node_modules"}
+
+
+@dataclass(frozen=True)
+class Finding:
+    """One lint hit.  ``path`` is repo-relative; jaxpr findings use the
+    pseudo-path ``<jaxpr:{arch}/{kind}>`` with line 0."""
+
+    rule: str
+    path: str
+    line: int
+    message: str
+    snippet: str = ""
+
+    def format(self) -> str:
+        loc = f"{self.path}:{self.line}" if self.line else self.path
+        out = f"{loc}: [{self.rule}] {self.message}"
+        if self.snippet:
+            out += f"\n      {self.snippet}"
+        return out
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+@dataclass(frozen=True)
+class Rule:
+    name: str
+    doc: str  # one-line rationale (docs/lint.md holds the full catalog)
+    scope: str  # "file" | "repo"
+    scan: tuple[str, ...]  # repo-relative path prefixes (file scope)
+    exclude: tuple[str, ...]  # repo-relative paths skipped (self-referential docs)
+    check: Callable
+
+
+RULES: dict[str, Rule] = {}
+
+
+def rule(name: str, *, doc: str, scan: tuple[str, ...] = (), exclude: tuple[str, ...] = (),
+         scope: str = "file"):
+    """Register a checker.  File-scope checkers take ``(rel, text, tree)``
+    and yield Findings; repo-scope checkers take the repo root ``Path``."""
+
+    def deco(fn):
+        if name in RULES:
+            raise ValueError(f"duplicate dragonlint rule {name!r}")
+        if scope == "file" and not scan:
+            raise ValueError(f"file rule {name!r} needs scan prefixes")
+        RULES[name] = Rule(name=name, doc=" ".join(doc.split()), scope=scope,
+                           scan=tuple(scan), exclude=tuple(exclude), check=fn)
+        return fn
+
+    return deco
+
+
+# --------------------------------------------------------------------------- #
+# suppressions
+# --------------------------------------------------------------------------- #
+
+# the marker may follow a justification in the same comment:
+#   # host static by contract -- dragonlint: disable=host-sync
+_DISABLE_RE = re.compile(r"#.*?dragonlint:\s*disable=([A-Za-z0-9_,\- ]+)")
+
+
+def suppressions(text: str) -> dict[int, set[str]]:
+    """``# dragonlint: disable=<rule>[,<rule>...]`` markers, resolved to the
+    line they guard: the marker's own line when it trails code, the *next*
+    line when the marker is a comment-only line (the justification-comment
+    style the repo uses)."""
+    sup: dict[int, set[str]] = {}
+    for i, line in enumerate(text.splitlines(), 1):
+        m = _DISABLE_RE.search(line)
+        if not m:
+            continue
+        names = {n.strip() for n in m.group(1).split(",") if n.strip()}
+        target = i if line.split("#", 1)[0].strip() else i + 1
+        sup.setdefault(target, set()).update(names)
+    return sup
+
+
+def _suppressed(f: Finding, sup: dict[int, set[str]]) -> bool:
+    names = sup.get(f.line, set())
+    return f.rule in names or "all" in names
+
+
+# --------------------------------------------------------------------------- #
+# drivers
+# --------------------------------------------------------------------------- #
+
+
+def file_rules() -> list[Rule]:
+    return [r for r in RULES.values() if r.scope == "file"]
+
+
+def repo_rules() -> list[Rule]:
+    return [r for r in RULES.values() if r.scope == "repo"]
+
+
+def _applies(r: Rule, rel: str) -> bool:
+    if rel in r.exclude:
+        return False
+    return any(rel == s or rel.startswith(s) for s in r.scan)
+
+
+def lint_source(rel: str, text: str, rules: Iterable[Rule] | None = None) -> list[Finding]:
+    """Run every applicable file rule over one source text (the unit the
+    fixture tests and the ``--files`` pre-commit mode are built on)."""
+    rules = list(rules) if rules is not None else file_rules()
+    try:
+        tree = ast.parse(text)
+    except SyntaxError as e:
+        return [Finding("parse-error", rel, e.lineno or 0, f"syntax error: {e.msg}")]
+    sup = suppressions(text)
+    out = []
+    for r in rules:
+        if not _applies(r, rel):
+            continue
+        out.extend(f for f in r.check(rel, text, tree) if not _suppressed(f, sup))
+    return out
+
+
+def _iter_py_files(root: Path, prefixes: set[str]):
+    seen = set()
+    for prefix in sorted(prefixes):
+        base = root / prefix
+        candidates = [base] if base.is_file() else sorted(base.rglob("*.py")) if base.is_dir() else []
+        for path in candidates:
+            rel = path.relative_to(root).as_posix()
+            if rel in seen or _SKIP_PARTS.intersection(path.parts):
+                continue
+            seen.add(rel)
+            yield path, rel
+
+
+def run_pass_a(root: Path = REPO_ROOT, files: list[str] | None = None,
+               rules: Iterable[str] | None = None) -> list[Finding]:
+    """Pass A: file rules over the repo (or just ``files``), plus repo-scope
+    rules (corpus checks) when running the full tree."""
+    selected = [RULES[n] for n in rules] if rules is not None else list(RULES.values())
+    frules = [r for r in selected if r.scope == "file"]
+    findings: list[Finding] = []
+    if files is not None:
+        for f in files:
+            path = Path(f)
+            rel = path.resolve().relative_to(root.resolve()).as_posix() if path.is_absolute() \
+                else path.as_posix()
+            if not (root / rel).exists():
+                continue
+            findings.extend(lint_source(rel, (root / rel).read_text(), frules))
+        return findings
+    prefixes = {s for r in frules for s in r.scan}
+    for path, rel in _iter_py_files(root, prefixes):
+        findings.extend(lint_source(rel, path.read_text(), frules))
+    for r in selected:
+        if r.scope == "repo":
+            findings.extend(r.check(root))
+    return findings
+
+
+# --------------------------------------------------------------------------- #
+# reports
+# --------------------------------------------------------------------------- #
+
+ANALYSIS_PATH = "results/analysis/dragonlint.json"
+
+
+def write_report(root: Path, pass_a: list[Finding], pass_b: dict | None,
+                 path: str | None = None) -> Path:
+    out = root / (path or ANALYSIS_PATH)
+    out.parent.mkdir(parents=True, exist_ok=True)
+    n_b = len(pass_b["findings"]) if pass_b else 0
+    payload = {
+        "version": 1,
+        "rules": {n: {"scope": r.scope, "doc": r.doc} for n, r in sorted(RULES.items())},
+        "pass_a": {"findings": [f.to_json() for f in pass_a]},
+        "pass_b": pass_b,
+        "ok": not pass_a and n_b == 0,
+    }
+    out.write_text(json.dumps(payload, indent=1, default=str) + "\n")
+    return out
+
+
+def render(findings: list[Finding], header: str) -> str:
+    if not findings:
+        return f"{header}: clean"
+    lines = [f"{header}: {len(findings)} finding(s)"]
+    lines += [f.format() for f in findings]
+    return "\n".join(lines)
