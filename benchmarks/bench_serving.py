@@ -1,9 +1,32 @@
-"""Serving benchmark: the continuous-batching engine on a reduced qwen
-config — throughput, per-token latency and TTFT with mixed request sizes.
-(The paper-side serving numbers are the decode/prefill roofline cells;
-this measures the ENGINE's scheduling overhead end-to-end on CPU.)"""
+"""Serving benchmark: token engine + fault-contained design service.
+
+Two sections, both written to ``results/bench/serving.json``:
+
+* **token** — the continuous-batching engine on a reduced qwen config:
+  throughput, per-token latency and TTFT with mixed request sizes (the
+  paper-side serving numbers are the decode/prefill roofline cells; this
+  measures the ENGINE's scheduling overhead end-to-end on CPU);
+
+* **chaos** — the :class:`repro.serving.DesignService` resilience layer
+  under the seeded chaos harness (docs/serving.md): availability (fraction
+  of queries answered ok within deadline), p50/p99 reply latency, retry and
+  injection counts, plus three hard gates —
+
+    1. *isolation*: every batch completes, one reply per query, zero
+       uncaught exceptions;
+    2. *transient-only availability == 1.0*: every fault class that clears
+       on retry MUST clear under the default policy (the CI probe's gate);
+    3. *bit-identity*: replies for queries the chaos schedule left clean
+       are bit-identical (``to_json`` string equality) to a no-chaos run,
+       and the seeded schedule itself replays identically.
+
+``--quick --chaos`` is the CI probe: design-service section only, writing
+``serving_quick.json`` (the canonical ``serving.json`` comes from a full
+run on an idle machine).
+"""
 from __future__ import annotations
 
+import argparse
 import time
 
 import jax
@@ -12,10 +35,18 @@ import numpy as np
 from benchmarks.common import emit, save_json
 from repro.configs import get_config
 from repro.models.model import build_model
-from repro.serving import Engine, Request
+from repro.serving import (
+    ChaosConfig,
+    ChaosInjector,
+    DesignQuery,
+    DesignService,
+    Engine,
+    Request,
+    RetryPolicy,
+)
 
 
-def run(quick: bool = False) -> dict:
+def token_bench(quick: bool = False) -> dict:
     cfg = get_config("qwen2.5-32b").reduced()
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
@@ -41,9 +72,154 @@ def run(quick: bool = False) -> dict:
     gain = out["slots4"]["tok_per_s"] / max(out["slots1"]["tok_per_s"], 1e-9)
     emit("serving", dict(batching_throughput_gain=round(gain, 2)))
     out["batching_gain"] = gain
+    return out
+
+
+# --------------------------------------------------------------------------- #
+# design-service chaos probe
+# --------------------------------------------------------------------------- #
+
+_SEED = 20260808
+
+
+def _queries(n: int, optimize_every: int = 0) -> list[DesignQuery]:
+    """A deterministic mixed stream over one shape bucket (lstm/merge_sort
+    share (1, 32)), so after the first cold queries everything is warm —
+    the regime availability and p99 are defined on."""
+    kinds = ("simulate", "explain")
+    loads = ("lstm", "merge_sort")
+    qs = []
+    for i in range(n):
+        if optimize_every and i and i % optimize_every == 0:
+            qs.append(DesignQuery(i, "optimize", loads[i % 2],
+                                  params=dict(steps=6, report=False)))
+        else:
+            qs.append(DesignQuery(i, kinds[i % 2], loads[(i // 2) % 2]))
+    return qs
+
+
+def _fingerprints(replies) -> dict:
+    """qid -> canonical result text for ok replies (bit-identity oracle:
+    report objects serialize every float, so string equality is value
+    equality down to the last bit)."""
+    return {r.qid: r.result.to_json() for r in replies if r.ok}
+
+
+def _serve(queries, chaos=None, retry=None) -> tuple:
+    svc = DesignService("base", chaos=chaos,
+                        retry=retry or RetryPolicy(max_attempts=4, base_s=0.005))
+    t0 = time.perf_counter()
+    replies = svc.serve(queries)
+    wall = time.perf_counter() - t0
+    return svc, replies, wall
+
+
+def _latency(replies, st) -> dict:
+    walls = np.asarray([r.wall_s for r in replies if r.ok], np.float64)
+    return dict(
+        queries=len(replies),
+        ok=int(sum(r.ok for r in replies)),
+        availability=round(st.availability, 6),
+        retries=st.retries,
+        deadline_misses=st.deadline_misses,
+        degraded=st.degraded,
+        errors=dict(st.errors),
+        stragglers=len(st.stragglers),
+        p50_ms=round(float(np.percentile(walls, 50)) * 1e3, 2) if walls.size else None,
+        p99_ms=round(float(np.percentile(walls, 99)) * 1e3, 2) if walls.size else None,
+    )
+
+
+def chaos_bench(quick: bool = False) -> dict:
+    n = 24 if quick else 96
+    queries = _queries(n, optimize_every=0 if quick else 24)
+    out: dict = {"seed": _SEED, "queries": n}
+
+    # 1) clean baseline: no chaos — also the bit-identity oracle
+    svc0, replies0, wall0 = _serve(queries)
+    base = _fingerprints(replies0)
+    out["clean"] = {**_latency(replies0, svc0.stats), "wall_s": round(wall0, 2)}
+    assert len(replies0) == len(queries), "isolation: batch must always complete"
+    emit("serving.chaos", dict(mode="clean", **{k: out["clean"][k] for k in ("availability", "p50_ms", "p99_ms")}))
+
+    # 2) transient-only chaos: every fault clears on retry -> the hard gate
+    inj_t = ChaosInjector(ChaosConfig(seed=_SEED, p_transient=0.35, p_compile_fail=0.2))
+    svc_t, replies_t, wall_t = _serve(queries, chaos=inj_t)
+    out["transient_only"] = {**_latency(replies_t, svc_t.stats),
+                             "injected": inj_t.summary(), "wall_s": round(wall_t, 2)}
+    emit("serving.chaos", dict(mode="transient_only",
+                               availability=out["transient_only"]["availability"],
+                               injected=sum(inj_t.summary().values())))
+    if out["transient_only"]["availability"] != 1.0:
+        raise SystemExit(
+            f"GATE FAILED: transient-only chaos availability "
+            f"{out['transient_only']['availability']} != 1.0 — retryable faults "
+            "must always clear under the default RetryPolicy"
+        )
+
+    # 3) full chaos: transients + NaN poisoning + latency spikes
+    cfg = ChaosConfig(seed=_SEED, p_transient=0.3, p_compile_fail=0.1,
+                      p_nan=0.25, p_latency=0.2, latency_s=0.02)
+    inj_f = ChaosInjector(cfg)
+    svc_f, replies_f, wall_f = _serve(queries, chaos=inj_f)
+    stats_f = svc_f.stats
+    plans = inj_f.schedule([q.qid for q in queries])
+    clean_qids = {p.qid for p in plans if p.clean}
+    fp_f = _fingerprints(replies_f)
+    mismatch = [q for q in clean_qids if q in base and q in fp_f and base[q] != fp_f[q]]
+    out["full"] = {
+        **_latency(replies_f, stats_f),
+        "injected": inj_f.summary(),
+        "wall_s": round(wall_f, 2),
+        "clean_queries": len(clean_qids),
+        "bit_identical_clean": len(clean_qids) - len(mismatch),
+        "schedule": [p.to_json() for p in plans if not p.clean],
+    }
+    emit("serving.chaos", dict(mode="full", availability=out["full"]["availability"],
+                               p99_ms=out["full"]["p99_ms"],
+                               injected=sum(inj_f.summary().values())))
+    assert len(replies_f) == len(queries), "isolation: batch must always complete"
+    if mismatch:
+        raise SystemExit(
+            f"GATE FAILED: {len(mismatch)} fault-free replies differ from the "
+            f"no-chaos run (qids {sorted(mismatch)[:8]}) — chaos must not perturb "
+            "untouched queries"
+        )
+    if out["full"]["availability"] < 0.99:
+        raise SystemExit(
+            f"GATE FAILED: full-chaos availability {out['full']['availability']} < 0.99"
+        )
+
+    # 4) determinism: same seed -> identical schedule and identical outcomes
+    inj_r = ChaosInjector(cfg)
+    svc_r, replies_r, _ = _serve(queries, chaos=inj_r)
+    same_sched = [p.to_json() for p in inj_r.schedule([q.qid for q in queries])] == \
+        [p.to_json() for p in inj_f.schedule([q.qid for q in queries])]
+    same_outcome = [(r.qid, r.ok, r.error.code if r.error else None) for r in replies_r] == \
+        [(r.qid, r.ok, r.error.code if r.error else None) for r in replies_f]
+    same_results = _fingerprints(replies_r) == fp_f
+    out["replay"] = dict(same_schedule=same_sched, same_outcomes=same_outcome,
+                         same_results=same_results,
+                         availability=round(svc_r.stats.availability, 6))
+    if not (same_sched and same_outcome and same_results):
+        raise SystemExit("GATE FAILED: seeded chaos replay diverged (schedule/outcomes/results)")
+    emit("serving.chaos", dict(mode="replay", deterministic=True))
+    return out
+
+
+def run(quick: bool = False, chaos_only: bool = False) -> dict:
+    out: dict = {}
+    if not chaos_only:
+        out.update(token_bench(quick))
+    out["chaos"] = chaos_bench(quick)
     save_json("serving", out, quick=quick)
     return out
 
 
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true", help="CI probe sizes; writes serving_quick.json")
+    ap.add_argument("--chaos", action="store_true",
+                    help="design-service chaos probe only (skip the token-engine bench)")
+    args = ap.parse_args()
+    run(quick=args.quick, chaos_only=args.chaos)

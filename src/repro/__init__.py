@@ -52,11 +52,11 @@ def _version() -> str:
     """Single-sourced from pyproject.toml: the installed distribution's
     metadata when packaged, the file itself in a source checkout."""
     try:
-        from importlib.metadata import version
+        from importlib.metadata import PackageNotFoundError, version
 
         return version("dragon-repro")
-    except Exception:
-        pass
+    except PackageNotFoundError:
+        pass  # source checkout: fall through to pyproject.toml
     import pathlib
     import re
 

@@ -710,16 +710,17 @@ class Session:
             tech_z, arch_z, None,
             _dopt.adam_init(tech_z), _dopt.adam_init(arch_z),
             _dopt.adam_init(jnp.zeros(1)),
+            _dopt.guard_init(),
         )
         mix = (
             jnp.zeros(len(PARETO_METRICS)), jnp.float32(jnp.inf),
             jnp.float32(jnp.inf), jnp.float32(1.0),
         )
 
-        def opt(st, g, lr, mx):
-            return _dopt._dopt_step(st, g, lr, mx, spec, objective, None, "both", mcfg)
+        def opt(st, g, lr, mx, flt):
+            return _dopt._dopt_step(st, g, lr, mx, flt, spec, objective, None, "both", mcfg)
 
-        out["optimize"] = jax.make_jaxpr(opt)(state, gstack, jnp.float32(0.05), mix)
+        out["optimize"] = jax.make_jaxpr(opt)(state, gstack, jnp.float32(0.05), mix, jnp.float32(0.0))
 
         # the population chunk's member axis, minimally populated (P=2)
         pop = 2

@@ -137,8 +137,19 @@ def _default_chunk(steps: int, target_factor) -> int:
     return -(-steps // n_chunks)
 
 
-def _dopt_step(state, gstack: Graph, lr, mix, spec, objective, area_constraint, opt_over, mcfg):
-    """One DOpt epoch (forward + backward + Adam + in-jit log-space clamp).
+def guard_init() -> tuple:
+    """Initial non-finite-containment guard carried through the scan:
+    ``(lr_scale, last_metrics)``.  ``lr_scale`` multiplies the learning rate
+    (1.0 until a fault halves it); ``last_metrics`` is the most recent
+    *accepted* history row (NaN until the first finite epoch), emitted in
+    place of a faulted epoch's metrics so history never carries the
+    corruption."""
+    return (jnp.float32(1.0), jnp.full((5,), jnp.nan, jnp.float32))
+
+
+def _dopt_step(state, gstack: Graph, lr, mix, fault, spec, objective, area_constraint, opt_over, mcfg):
+    """One DOpt epoch (forward + backward + Adam + in-jit log-space clamp),
+    with in-jit non-finite containment.
 
     Top-level (not a closure) so the jitted chunk runner below caches across
     ``optimize()`` calls: the workload stack, lr and the objective mix are
@@ -149,9 +160,22 @@ def _dopt_step(state, gstack: Graph, lr, mix, spec, objective, area_constraint, 
     penalty_weight)`` tuple consumed when ``objective == "mixed"`` (the
     multi-objective scalarization); for string objectives it is carried but
     unused.
+
+    ``fault`` is the traced chaos seam: a positive scalar poisons this
+    epoch's loss and gradients with NaN *before* the containment check, so
+    the rollback path is exercised by the exact machinery a real divergence
+    would hit.  Containment: when the loss or any gradient leaf is
+    non-finite, the epoch's parameter/Adam/type updates are rolled back
+    (the previous state is re-emitted bit-for-bit), the guard's ``lr_scale``
+    halves (recovering 2x per clean epoch, capped at 1.0), the elasticity
+    contribution is zeroed, and the history row re-emits the last accepted
+    metrics with the trailing fault flag set.  A fault-free epoch is
+    bit-identical to the unguarded computation: the selects take the
+    all-true branch and ``lr * 1.0`` is exact.
     """
     instrument.count_trace("dopt._dopt_step")  # retrace probe (trace-time only)
-    tech_z, arch_z, type_logits, tstate, astate, ystate = state
+    tech_z, arch_z, type_logits, tstate, astate, ystate, guard = state
+    lr_scale, last_metrics = guard
     dopt2 = opt_over == "both+types"
 
     def loss_fn(tz, az, tl):
@@ -170,27 +194,47 @@ def _dopt_step(state, gstack: Graph, lr, mix, spec, objective, area_constraint, 
     (val, perfs), grads = jax.value_and_grad(loss_fn, argnums=(0, 1, 2) if dopt2 else (0, 1), has_aux=True)(
         tech_z, arch_z, type_logits
     )
+    # chaos seam: an injected fault corrupts loss+grads exactly like a real
+    # numeric escape would, upstream of the containment logic
+    poison = fault > 0
+    val = jnp.where(poison, jnp.full_like(val, jnp.nan), val)
+    grads = jax.tree.map(lambda g: jnp.where(poison, jnp.full_like(g, jnp.nan), g), grads)
+    ok = jnp.isfinite(val)
+    for leaf in jax.tree.leaves(grads):
+        ok = ok & jnp.all(jnp.isfinite(leaf))
     g_tech, g_arch = grads[0], grads[1]
+    prev = (tech_z, arch_z, type_logits, tstate, astate, ystate)
+    lr_eff = lr * lr_scale
     if opt_over in ("tech", "both", "both+types"):
-        upd, tstate = adam_update(g_tech, tstate, lr)
+        upd, tstate = adam_update(g_tech, tstate, lr_eff)
         tech_z = jax.tree.map(lambda p, u: p + u, tech_z, upd)
     if opt_over in ("arch", "both", "both+types"):
-        upd, astate = adam_update(g_arch, astate, lr)
+        upd, astate = adam_update(g_arch, astate, lr_eff)
         arch_z = jax.tree.map(lambda p, u: p + u, arch_z, upd)
     if dopt2:
-        upd, ystate = adam_update(grads[2], ystate, lr * 4.0)
+        upd, ystate = adam_update(grads[2], ystate, lr_eff * 4.0)
         type_logits = type_logits + upd
     # clamp to realistic bounds (paper Alg. 6) — log is monotone, so
     # clamping z against log(bounds) inside the jitted body replaces the
     # old out-of-jit exp/clip/log host round-trip
     tech_z = clamp_params(tech_z, *(to_log(b) for b in TechParams.bounds()))
     arch_z = clamp_params(arch_z, *(to_log(b) for b in ArchParams.bounds()))
-    # elasticity d log obj / d log param = gradient in log space
-    elast = _flatten_tech(g_tech)
-    # history row: [objective, runtime, energy, area, edp] of workload 0
+    # containment: roll back to the last finite state when anything escaped
+    cand = (tech_z, arch_z, type_logits, tstate, astate, ystate)
+    tech_z, arch_z, type_logits, tstate, astate, ystate = jax.tree.map(
+        lambda n_, o_: jnp.where(ok, n_, o_), cand, prev
+    )
+    lr_scale = jnp.where(ok, jnp.minimum(lr_scale * 2.0, 1.0), lr_scale * 0.5)
+    # elasticity d log obj / d log param = gradient in log space (zeroed on
+    # a faulted epoch so the importance accumulator never sees NaN)
+    elast = jnp.where(ok, _flatten_tech(g_tech), jnp.zeros(len(tech_param_names()), jnp.float32))
+    # history row: [objective, runtime, energy, area, edp] of workload 0,
+    # re-emitting the last accepted row on a faulted epoch, + fault flag
     rt, en, ar = perfs.runtime[0], perfs.energy[0], perfs.area[0]
-    metrics = jnp.stack([val, rt, en, ar, rt * en])
-    return (tech_z, arch_z, type_logits, tstate, astate, ystate), elast, metrics
+    row = jnp.where(ok, jnp.stack([val, rt, en, ar, rt * en]), last_metrics)
+    metrics = jnp.concatenate([row, 1.0 - ok.astype(jnp.float32)[None]])
+    guard = (lr_scale, row)
+    return (tech_z, arch_z, type_logits, tstate, astate, ystate, guard), elast, metrics
 
 
 @partial(
@@ -198,19 +242,20 @@ def _dopt_step(state, gstack: Graph, lr, mix, spec, objective, area_constraint, 
     static_argnames=("spec", "objective", "area_constraint", "opt_over", "mcfg", "n"),
     donate_argnums=(0, 1),
 )
-def _fused_chunk(state, elast_acc, gstack: Graph, lr, mix, *, spec, objective, area_constraint, opt_over, mcfg, n: int):
+def _fused_chunk(state, elast_acc, gstack: Graph, lr, mix, faults, *, spec, objective, area_constraint, opt_over, mcfg, n: int):
     """``n`` device-resident epochs as one ``lax.scan`` dispatch.
 
     Param/Adam state is donated between chunks; elasticity accumulates
     on-device; the per-epoch metric history comes back as one stacked
-    [n, 5] array (a single host transfer per chunk)."""
+    [n, 6] array (a single host transfer per chunk).  ``faults`` is the
+    [n] chaos schedule scanned alongside (all-zero outside chaos tests)."""
 
-    def body(c, _):
+    def body(c, fault):
         st, eacc = c
-        st, elast, metrics = _dopt_step(st, gstack, lr, mix, spec, objective, area_constraint, opt_over, mcfg)
+        st, elast, metrics = _dopt_step(st, gstack, lr, mix, fault, spec, objective, area_constraint, opt_over, mcfg)
         return (st, eacc + jnp.abs(elast)), metrics
 
-    return jax.lax.scan(body, (state, elast_acc), None, length=n)
+    return jax.lax.scan(body, (state, elast_acc), faults, length=n)
 
 
 def optimize(
@@ -232,6 +277,7 @@ def optimize(
     area_budget: float | None = None,  # worst-case area ceiling (mm^2), mixed only
     power_budget: float | None = None,  # worst-case power ceiling (W), mixed only
     penalty_weight: float = 1.0,  # budget-penalty scale, mixed only
+    nan_epochs: tuple = (),  # chaos seam: epochs whose loss/grads are NaN-poisoned
 ) -> OptResult:
     """DOpt driver.
 
@@ -297,17 +343,24 @@ def optimize(
     )
     static = dict(spec=spec, objective=objective, area_constraint=area_constraint, opt_over=opt_over, mcfg=mcfg)
 
+    # chaos schedule: which epochs get their loss/grads NaN-poisoned inside
+    # the jitted step (tests the rollback path with the real machinery)
+    fault_np = np.zeros(steps, np.float32)
+    for i in nan_epochs:
+        if 0 <= int(i) < steps:
+            fault_np[int(i)] = 1.0
+
     # the pre-fusion baseline: a per-call jitted step closure, exactly the
     # old driver's cost model (retraces every optimize() invocation, one
     # dispatch + host sync per epoch)
-    step_jit = jax.jit(lambda st: _dopt_step(st, gstack, lr_arr, mix, **static))
+    step_jit = jax.jit(lambda st, flt: _dopt_step(st, gstack, lr_arr, mix, flt, **static))
 
     tstate, astate = adam_init(tech_z), adam_init(arch_z)
     ystate = adam_init(type_logits) if dopt2 else adam_init(jnp.zeros(1))
-    state = (tech_z, arch_z, type_logits, tstate, astate, ystate)
+    state = (tech_z, arch_z, type_logits, tstate, astate, ystate, guard_init())
     elast_acc = jnp.zeros(len(tech_param_names()), jnp.float32)
 
-    hist = dict(objective=[], runtime=[], energy=[], area=[], edp=[])
+    hist = dict(objective=[], runtime=[], energy=[], area=[], edp=[], fault=[])
 
     def _append(m: np.ndarray):
         hist["objective"] += m[:, 0].tolist()
@@ -315,6 +368,7 @@ def optimize(
         hist["energy"] += m[:, 2].tolist()
         hist["area"] += m[:, 3].tolist()
         hist["edp"] += m[:, 4].tolist()
+        hist["fault"] += m[:, 5].tolist()
 
     def _target_met() -> bool:
         """True once the objective has improved by target_factor.  The fused
@@ -331,7 +385,8 @@ def optimize(
         chunk = _default_chunk(steps, target_factor) if chunk is None else max(1, chunk)
         while executed < steps:
             n = min(chunk, steps - executed)
-            (state, elast_acc), metrics = _fused_chunk(state, elast_acc, gstack, lr_arr, mix, n=n, **static)
+            faults = jnp.asarray(fault_np[executed:executed + n])
+            (state, elast_acc), metrics = _fused_chunk(state, elast_acc, gstack, lr_arr, mix, faults, n=n, **static)
             executed += n
             _append(np.asarray(metrics))  # the one host sync per chunk
             if log_every:
@@ -344,7 +399,7 @@ def optimize(
                 break
     else:
         for i in range(steps):
-            state, elast, metrics = step_jit(state)
+            state, elast, metrics = step_jit(state, jnp.float32(fault_np[i]))
             elast_acc = elast_acc + jnp.abs(elast)
             executed += 1
             _append(np.asarray(metrics)[None])

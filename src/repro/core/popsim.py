@@ -174,7 +174,14 @@ def _member_step(tech_z, arch_z, tstate, astate, weights, area_budget, power_bud
                  gstack, lr, penalty_w, spec, mcfg, opt_over):
     """One epoch of one member — mirrors dopt._dopt_step exactly (same loss
     for a one-hot mix, same Adam, same in-jit log-space Alg.-6 clamp), which
-    is what the population-vs-sequential equivalence tests pin."""
+    is what the population-vs-sequential equivalence tests pin.
+
+    Non-finite containment, vmapped per member: if a member's loss or
+    gradients go non-finite, its parameter/Adam update is rolled back (the
+    member freezes at its last finite state) while the rest of the
+    population keeps descending — one diverging trajectory cannot poison
+    its neighbours or the final front.  A finite epoch is bit-identical to
+    the unguarded step (the selects take the all-true branch)."""
     instrument.count_trace("popsim._member_step")  # retrace probe (trace-time only)
 
     def loss_fn(tz, az):
@@ -184,6 +191,10 @@ def _member_step(tech_z, arch_z, tstate, astate, weights, area_budget, power_bud
         )
 
     (val, perfs), (g_t, g_a) = jax.value_and_grad(loss_fn, argnums=(0, 1), has_aux=True)(tech_z, arch_z)
+    ok = jnp.isfinite(val)
+    for leaf in jax.tree.leaves((g_t, g_a)):
+        ok = ok & jnp.all(jnp.isfinite(leaf))
+    prev = (tech_z, arch_z, tstate, astate)
     if opt_over in ("tech", "both"):
         upd, tstate = adam_update(g_t, tstate, lr)
         tech_z = jax.tree.map(lambda p, u: p + u, tech_z, upd)
@@ -192,6 +203,10 @@ def _member_step(tech_z, arch_z, tstate, astate, weights, area_budget, power_bud
         arch_z = jax.tree.map(lambda p, u: p + u, arch_z, upd)
     tech_z = clamp_params(tech_z, *(to_log(b) for b in TechParams.bounds()))
     arch_z = clamp_params(arch_z, *(to_log(b) for b in ArchParams.bounds()))
+    cand = (tech_z, arch_z, tstate, astate)
+    tech_z, arch_z, tstate, astate = jax.tree.map(
+        lambda n_, o_: jnp.where(ok, n_, o_), cand, prev
+    )
     # per-epoch row: [scalarized value, log time, log energy, log area, log edp]
     return (tech_z, arch_z, tstate, astate), jnp.concatenate([val[None], stacked_log_metrics(perfs)])
 
@@ -417,7 +432,11 @@ def pareto_dse(
     logm, area, power = np.asarray(logm), np.asarray(area), np.asarray(power)
 
     tol = 1.0 + budget_tol
-    feasible = (area <= np.asarray(ab) * tol) & (power <= np.asarray(pb) * tol)
+    # a member whose final metrics are non-finite (a divergence the in-step
+    # freeze could not mask, or corrupted evaluation) is infeasible by
+    # definition — it must never reach the front or the hypervolume box
+    finite = np.isfinite(logm).all(axis=1) & np.isfinite(area) & np.isfinite(power)
+    feasible = finite & (area <= np.asarray(ab) * tol) & (power <= np.asarray(pb) * tol)
     midx = np.asarray([PARETO_METRICS.index(m) for m in metrics])
     pts = jnp.asarray(logm[:, midx])
     front_mask = np.asarray(non_dominated_mask(pts, jnp.asarray(feasible)))

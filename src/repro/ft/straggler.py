@@ -45,6 +45,15 @@ class StragglerMonitor:
             self.flagged.append((step, dt))
         return is_straggler
 
+    def reprime(self, dt: float) -> None:
+        """Reset the baseline to ``dt``, exactly like the end-of-warmup reset
+        above: used when a known regime change (a cold compile in the serving
+        path, a device swap) makes the old EWMA meaningless — the expensive
+        step is recorded as the new steady state, never flagged."""
+        self.n = max(self.n + 1, self.warmup_steps)
+        self.ewma = dt
+        self.ewvar = (0.25 * dt) ** 2
+
 
 class SimulatedFailure(RuntimeError):
     """Raised by fault-injection hooks to emulate device/host loss."""

@@ -1,7 +1,24 @@
+from repro.serving.chaos import ChaosConfig, ChaosInjector, FaultPlan  # noqa: F401
 from repro.serving.engine import (  # noqa: F401
     DesignQuery,
     DesignReply,
     DesignService,
     Engine,
     Request,
+    ServiceStats,
+)
+from repro.serving.resilience import (  # noqa: F401
+    CircuitBreaker,
+    CircuitOpen,
+    ClientError,
+    DeadlineConfig,
+    DeadlineExceeded,
+    FaultInfo,
+    NumericFault,
+    RetryPolicy,
+    ServingFault,
+    TransientFault,
+    classify_exception,
+    nonfinite_in,
+    run_guarded,
 )

@@ -1,0 +1,158 @@
+"""Seeded, deterministic chaos harness for the design service.
+
+Resilience claims are only as good as the faults they were tested under, so
+the fault source must be *replayable*: :class:`ChaosInjector` derives every
+injection decision from ``SeedSequence([seed, qid])`` — a stable hash that
+does not depend on arrival order, retry interleaving, or wall clock.  The
+same seed therefore produces the identical fault schedule on every run and
+every platform, which is what lets the bench/CI gate assert exact
+availability numbers (bench_serving.py ``--chaos``) and lets tests diff two
+runs bit-for-bit.
+
+Fault repertoire (per query, mutually composable):
+
+  * **transient exception** — the attempt raises
+    :class:`~repro.serving.resilience.TransientFault` before the engine runs;
+  * **compile failure** — same raise, labelled as a failed trace/compile
+    (the service still observes it pre-result, like a real XLA abort);
+  * **latency spike** — the first attempt sleeps ``latency_s`` before the
+    engine runs, stressing deadlines and the straggler monitor;
+  * **NaN poisoning** — the attempt's *result* has a headline field replaced
+    with NaN (``SimReport.area_mm2`` / ``OptResult.improvement`` /
+    ``FrontierResult.hypervolume``), exercising the service's non-finite
+    containment and retry instead of the engines' own in-jit guards.
+
+Faults fire on the *leading* attempts of a query only (bounded depth), so a
+retry policy with enough attempts always clears transient-class chaos —
+this is the property the CI chaos probe hard-gates at availability == 1.0.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import Counter
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import numpy as np
+
+from repro.serving.resilience import TransientFault
+
+_NAN = float("nan")
+
+
+@dataclass(frozen=True)
+class ChaosConfig:
+    """Per-fault marginal probabilities (independent draws per query) and
+    shape knobs.  ``depth`` is how many leading attempts each drawn fault
+    consumes — keep ``depth * (number of fault classes) < max_attempts`` if
+    availability must stay 1.0 under retry."""
+
+    seed: int = 0
+    p_transient: float = 0.0
+    p_compile_fail: float = 0.0
+    p_latency: float = 0.0
+    p_nan: float = 0.0
+    latency_s: float = 0.05
+    depth: int = 1
+
+
+@dataclass(frozen=True)
+class FaultPlan:
+    """The chaos verdict for one query: how many leading attempts raise a
+    transient, then how many raise a compile failure, then how many return a
+    NaN-poisoned result; ``latency`` delays the first attempt."""
+
+    qid: int
+    transient: int
+    compile_fail: int
+    nan: int
+    latency: bool
+
+    @property
+    def clean(self) -> bool:
+        return not (self.transient or self.compile_fail or self.nan or self.latency)
+
+    @property
+    def min_attempts(self) -> int:
+        """Attempts a retrying client needs to get a clean answer."""
+        return self.transient + self.compile_fail + self.nan + 1
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def poison(result: Any) -> Any:
+    """Return ``result`` with one headline metric NaN'd (frozen dataclasses
+    are rebuilt via ``dataclasses.replace``); non-report objects pass
+    through untouched."""
+    from repro.core.report import FrontierResult, OptResult, SimReport
+
+    if isinstance(result, SimReport):
+        return dataclasses.replace(result, area_mm2=_NAN)
+    if isinstance(result, OptResult):
+        return dataclasses.replace(result, improvement=_NAN)
+    if isinstance(result, FrontierResult):
+        return dataclasses.replace(result, hypervolume=_NAN)
+    return result
+
+
+class ChaosInjector:
+    """Wraps a query handler with the seeded fault schedule.
+
+    The service calls :meth:`call` once per attempt; everything the injector
+    does is a pure function of ``(config.seed, qid, attempt)`` plus the
+    handler's own (deterministic) result, so two services configured with
+    the same seed observe the same chaos regardless of timing.
+    """
+
+    def __init__(self, config: ChaosConfig, *, sleep: Callable[[float], None] = time.sleep):
+        self.config = config
+        self.sleep = sleep
+        self.injected: Counter = Counter()
+
+    # ----------------------------------------------------------- schedule --
+    def plan(self, qid: int) -> FaultPlan:
+        c = self.config
+        u = np.random.default_rng(
+            np.random.SeedSequence([c.seed & 0xFFFFFFFF, qid & 0xFFFFFFFF])
+        ).random(4)
+        d = c.depth
+        return FaultPlan(
+            qid=qid,
+            transient=d * int(u[0] < c.p_transient),
+            compile_fail=d * int(u[1] < c.p_compile_fail),
+            nan=d * int(u[2] < c.p_nan),
+            latency=bool(u[3] < c.p_latency),
+        )
+
+    def schedule(self, qids) -> list[FaultPlan]:
+        """The full fault schedule for a batch — what determinism tests and
+        the bench's bit-identity check compare against."""
+        return [self.plan(q) for q in qids]
+
+    # --------------------------------------------------------------- inject --
+    def call(self, handler: Callable[[], Any], *, qid: int, attempt: int) -> Any:
+        """Run one attempt of ``handler`` under the query's fault plan."""
+        p = self.plan(qid)
+        if p.latency and attempt == 0:
+            self.injected["latency"] += 1
+            self.sleep(self.config.latency_s)
+        if attempt < p.transient:
+            self.injected["transient"] += 1
+            raise TransientFault(f"chaos: injected transient fault (q{qid} attempt {attempt})")
+        if attempt - p.transient < p.compile_fail:
+            self.injected["compile_fail"] += 1
+            raise TransientFault(f"chaos: injected compile failure (q{qid} attempt {attempt})")
+        result = handler()
+        if attempt - p.transient - p.compile_fail < p.nan:
+            self.injected["nan"] += 1
+            bad = poison(result)
+            if bad is not result:
+                return bad
+            self.injected["nan"] -= 1  # nothing poisonable in this result type
+        return result
+
+    # ----------------------------------------------------------------- info --
+    def summary(self) -> dict:
+        return dict(self.injected)

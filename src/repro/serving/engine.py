@@ -30,6 +30,17 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.model import Model
+from repro.serving.resilience import (
+    CircuitBreaker,
+    CircuitOpen,
+    ClientError,
+    DeadlineConfig,
+    DeadlineExceeded,
+    FaultInfo,
+    RetryPolicy,
+    classify_exception,
+    run_guarded,
+)
 
 
 @dataclass
@@ -151,31 +162,69 @@ class Engine:
 @dataclass
 class DesignQuery:
     """One design question: simulate / explain / optimize a workload set
-    against an architecture.  ``workload`` and ``architecture`` accept
-    anything :class:`repro.api.Workload` / :class:`repro.api.Architecture`
-    accept (names, ``.dhd`` text, graphs, pytrees); ``architecture=None``
-    uses the service default.  ``params`` forwards engine knobs
-    (``steps``, ``lr``, ``opt_over``, ...)."""
+    against an architecture, or sweep the Pareto ``frontier``.  ``workload``
+    and ``architecture`` accept anything :class:`repro.api.Workload` /
+    :class:`repro.api.Architecture` accept (names, ``.dhd`` text, graphs,
+    pytrees); ``architecture=None`` uses the service default.  ``params``
+    forwards engine knobs (``steps``, ``lr``, ``opt_over``, ...);
+    ``deadline_s`` overrides the service's cold/warm budget for this query."""
 
     qid: int
-    kind: str  # "simulate" | "explain" | "optimize"
+    kind: str  # "simulate" | "explain" | "optimize" | "frontier"
     workload: Any
     architecture: Any = None
     objective: str = "edp"
     params: dict = field(default_factory=dict)
+    deadline_s: Optional[float] = None
 
 
 @dataclass
 class DesignReply:
+    """Every submitted query gets exactly one reply — success or a typed,
+    structured failure (docs/serving.md §reply contract).  ``ok=True``:
+    ``result`` holds the report and ``error`` is None.  ``ok=False``:
+    ``result`` is None and ``error`` carries the
+    :class:`~repro.serving.resilience.FaultInfo` (stable ``code``, human
+    message, attempts made, whether the fault class is retryable)."""
+
     qid: int
     kind: str
-    wall_s: float
+    wall_s: float  # total time in the service, retries and backoff included
     compiled: bool  # did answering require tracing a new program?
-    result: Any  # SimReport | OptResult (repro.core.report)
+    result: Any  # SimReport | OptResult | FrontierResult, or None on error
+    ok: bool = True
+    error: Optional[FaultInfo] = None
+    attempts: int = 1
+    deadline_s: float = float("inf")  # the budget this query was held to
+    straggler: bool = False  # flagged by the latency monitor (warm path only)
+
+
+@dataclass(frozen=True)
+class ServiceStats:
+    """Cache counters (same fields :class:`repro.api.CacheStats` exposes,
+    so existing consumers keep working) + the serving-health ledger."""
+
+    programs: int
+    hits: int
+    misses: int
+    traces: int
+    queries: int
+    ok: int
+    retries: int  # extra attempts beyond the first, summed over queries
+    deadline_misses: int
+    degraded: int  # fast-failed by an open circuit breaker
+    errors: dict  # fault code -> count
+    stragglers: tuple  # (qid, wall_s) pairs flagged by the latency monitor
+    breakers: dict  # (kind, bucket) -> breaker state snapshot
+
+    @property
+    def availability(self) -> float:
+        """Fraction of queries answered ok within their deadline."""
+        return self.ok / self.queries if self.queries else 1.0
 
 
 class DesignService:
-    """Answer many design queries against one compiled model.
+    """Answer many design queries against one compiled model, fault-contained.
 
     The hardware-simulation twin of the token :class:`Engine`: a
     :class:`repro.api.Session` owns the compiled-program cache, so the
@@ -183,38 +232,179 @@ class DesignService:
     cached executables and the service runs as fast as the hardware allows.
     This is the seam async batching / multi-tenant serving / remote workers
     plug into.
+
+    Every query runs through the resilience stack (docs/serving.md):
+
+    * **isolation** — :meth:`submit` never raises; a batch always completes
+      with one :class:`DesignReply` per query;
+    * **intake quarantine** — unparseable ``.dhd``, non-finite graph
+      tensors, empty workload sets and unknown kinds become structured
+      ``client-error`` replies before any engine runs;
+    * **deadlines** — per-query wall budgets, cold-compile vs warm
+      (:class:`DeadlineConfig`), predicted from whether this
+      (kind, spec, bucket, objective) shape has been served before;
+    * **bounded retry** — transient/numeric faults retry with deterministic
+      backoff while budget remains (:class:`RetryPolicy`);
+    * **non-finite containment** — results with NaN/inf headline fields are
+      typed ``numeric`` faults, never shipped;
+    * **circuit breaker** — repeated failures on one (kind, bucket) trip to
+      fast-fail replies until a cooldown (:class:`CircuitBreaker`);
+    * **latency tracking** — per-query wall times feed a
+      :class:`repro.ft.straggler.StragglerMonitor`; cold compiles re-prime
+      its EWMA (their cost is expected), warm outliers are flagged on the
+      reply and in :attr:`stats`.
+
+    ``chaos`` accepts a :class:`repro.serving.chaos.ChaosInjector` — the
+    seeded fault harness the bench/CI probe drives.  ``clock``/``sleep``
+    are injectable for deterministic tests.
     """
 
-    def __init__(self, architecture="base", **session_kw):
+    _KINDS = ("simulate", "explain", "optimize", "frontier")
+
+    def __init__(self, architecture="base", *, retry: Optional[RetryPolicy] = None,
+                 deadlines: Optional[DeadlineConfig] = None,
+                 breaker: Optional[CircuitBreaker] = None, chaos=None,
+                 monitor=None, clock=time.monotonic, sleep=time.sleep,
+                 **session_kw):
         from repro.api import Session
+        from repro.ft.straggler import StragglerMonitor
 
         self.session = Session(architecture, **session_kw)
+        self.retry = retry or RetryPolicy()
+        self.deadlines = deadlines or DeadlineConfig()
+        self.breaker = breaker or CircuitBreaker(clock=clock)
+        self.chaos = chaos
+        self.monitor = monitor or StragglerMonitor()
+        self._clock = clock
+        self._sleep = sleep
+        self._warm: set = set()  # (kind, spec, bucket, objective) shapes served
         self.replies: list[DesignReply] = []
+        self._queries = 0
+        self._ok = 0
+        self._retries = 0
+        self._deadline_misses = 0
+        self._degraded = 0
+        self._errors: dict = {}
 
+    # ------------------------------------------------------------- intake --
     def submit(self, q: DesignQuery) -> DesignReply:
-        handler = {
-            "simulate": lambda: self.session.simulate(q.workload, architecture=q.architecture),
-            "explain": lambda: self.session.explain(
-                q.workload, objective=q.objective, architecture=q.architecture
-            ),
-            "optimize": lambda: self.session.optimize(
-                q.workload, objective=q.objective, architecture=q.architecture, **q.params
-            ),
-        }.get(q.kind)
-        if handler is None:
-            raise ValueError(f"unknown DesignQuery.kind {q.kind!r}")
-        traces0 = self._traces()
-        t0 = time.perf_counter()
-        result = handler()
-        reply = DesignReply(
-            qid=q.qid,
-            kind=q.kind,
-            wall_s=time.perf_counter() - t0,
-            compiled=self._traces() > traces0,
-            result=result,
-        )
+        """Answer one query.  Never raises: every failure mode — bad input,
+        engine exception, non-finite result, blown deadline, open breaker —
+        degrades to a structured ``ok=False`` reply."""
+        try:
+            reply = self._answer(q)
+        except Exception as e:  # last-ditch isolation: a bug in the guard
+            # stack itself must still cost only this one query
+            fault = classify_exception(e)
+            reply = DesignReply(
+                qid=getattr(q, "qid", -1), kind=getattr(q, "kind", "?"),
+                wall_s=0.0, compiled=False, result=None, ok=False,
+                error=FaultInfo(code=fault.code, message=str(fault),
+                                attempts=1, retryable=fault.retryable),
+                attempts=1, deadline_s=0.0,
+            )
+        self._account(reply)
         self.replies.append(reply)
         return reply
+
+    def serve(self, queries: list[DesignQuery]) -> list[DesignReply]:
+        """Answer a batch.  Per-query isolation means the batch always
+        completes: len(replies) == len(queries), in order, no exceptions."""
+        return [self.submit(q) for q in queries]
+
+    # ------------------------------------------------------------- answer --
+    def _answer(self, q: DesignQuery) -> DesignReply:
+        t0 = self._clock()
+        if q.kind not in self._KINDS:
+            return self._refuse(q, t0, ClientError(
+                f"unknown DesignQuery.kind {q.kind!r} (expected one of {list(self._KINDS)})"
+            ))
+        # intake quarantine: resolve + validate inputs before any engine work
+        # (Workload/Architecture reject non-finite tensors, empty sets and
+        # malformed .dhd at construction)
+        try:
+            w = self.session._workload(q.workload)
+            arch = self.session._arch(q.architecture)
+        except Exception as e:
+            return self._refuse(q, t0, ClientError(
+                f"poison query quarantined at intake: {type(e).__name__}: {e}"
+            ))
+        bkey = (q.kind, w.bucket)
+        if not self.breaker.allow(bkey):
+            return self._refuse(q, t0, CircuitOpen(
+                f"circuit open for kind={q.kind!r} bucket={w.bucket} "
+                f"(cooldown {self.breaker.cooldown_s:.1f}s)"
+            ))
+        shape = (q.kind, arch.spec, w.bucket, q.objective)
+        cold = shape not in self._warm
+        deadline = q.deadline_s if q.deadline_s is not None else \
+            self.deadlines.budget_s(cold, q.kind)
+        handler = self._handler(q, w, arch)
+        if self.chaos is not None:
+            chaos, qid = self.chaos, q.qid
+
+            def fn(attempt):
+                return chaos.call(handler, qid=qid, attempt=attempt)
+        else:
+            def fn(attempt):
+                return handler()
+        traces0 = self._traces()
+        out = run_guarded(fn, policy=self.retry, deadline_s=deadline, token=q.qid,
+                          clock=self._clock, sleep=self._sleep)
+        compiled = self._traces() > traces0
+        self._warm.add(shape)
+        # client errors don't indict the server; everything else votes
+        if out.ok or out.fault.code != ClientError.code:
+            self.breaker.record(bkey, out.ok)
+        straggler = False
+        if out.ok:
+            if compiled:
+                # a cold compile is *expected* to be slow: reset the latency
+                # baseline instead of polluting the EWMA / flagging it
+                self.monitor.reprime(out.wall_s)
+            else:
+                straggler = bool(self.monitor.record(q.qid, out.wall_s))
+        return DesignReply(
+            qid=q.qid, kind=q.kind, wall_s=self._clock() - t0, compiled=compiled,
+            result=out.result, ok=out.ok, error=out.fault,
+            attempts=max(out.attempts, 1), deadline_s=deadline, straggler=straggler,
+        )
+
+    def _handler(self, q: DesignQuery, w, arch) -> Callable[[], Any]:
+        return {
+            "simulate": lambda: self.session.simulate(w, architecture=arch),
+            "explain": lambda: self.session.explain(
+                w, objective=q.objective, architecture=arch
+            ),
+            "optimize": lambda: self.session.optimize(
+                w, objective=q.objective, architecture=arch, **q.params
+            ),
+            "frontier": lambda: self.session.frontier(w, **q.params),
+        }[q.kind]
+
+    def _refuse(self, q: DesignQuery, t0: float, fault) -> DesignReply:
+        """A structured no-attempt reply (quarantine / open breaker)."""
+        return DesignReply(
+            qid=q.qid, kind=q.kind, wall_s=self._clock() - t0, compiled=False,
+            result=None, ok=False,
+            error=FaultInfo(code=fault.code, message=str(fault), attempts=0,
+                            retryable=fault.retryable),
+            attempts=0, deadline_s=0.0,
+        )
+
+    # ----------------------------------------------------------- plumbing --
+    def _account(self, r: DesignReply) -> None:
+        self._queries += 1
+        self._retries += max(0, r.attempts - 1)
+        if r.ok:
+            self._ok += 1
+            return
+        code = r.error.code if r.error else "fault"
+        self._errors[code] = self._errors.get(code, 0) + 1
+        if code == DeadlineExceeded.code:
+            self._deadline_misses += 1
+        elif code == CircuitOpen.code:
+            self._degraded += 1
 
     def _traces(self) -> int:
         """Traces attributable to this service: its own Session's programs
@@ -227,9 +417,13 @@ class DesignService:
             "dopt._dopt_step"
         ) + instrument.trace_count("popsim._member_step")
 
-    def serve(self, queries: list[DesignQuery]) -> list[DesignReply]:
-        return [self.submit(q) for q in queries]
-
     @property
-    def stats(self):
-        return self.session.stats
+    def stats(self) -> ServiceStats:
+        s = self.session.stats
+        return ServiceStats(
+            programs=s.programs, hits=s.hits, misses=s.misses, traces=s.traces,
+            queries=self._queries, ok=self._ok, retries=self._retries,
+            deadline_misses=self._deadline_misses, degraded=self._degraded,
+            errors=dict(self._errors), stragglers=tuple(self.monitor.flagged),
+            breakers=self.breaker.snapshot(),
+        )

@@ -42,6 +42,7 @@ EXPECTED_RULES = (
     "scan-donate",
     "stale-oracle-tag",
     "stray-debug",
+    "swallowed-fault",
 )
 
 
@@ -329,6 +330,50 @@ class TestStrayDebug:
                 print(len(rows), "rows")
             """
         assert not lint("src/repro/core/x.py", good)
+
+
+class TestSwallowedFault:
+    def test_fires_on_bare_except(self):
+        bad = """
+            def f(x):
+                try:
+                    return 1 / x
+                except:
+                    return 0
+            """
+        assert "swallowed-fault" in names(lint("src/repro/core/x.py", bad))
+
+    def test_fires_on_except_exception_pass(self):
+        bad = """
+            def f(x):
+                try:
+                    return 1 / x
+                except Exception:
+                    pass
+                return 0
+            """
+        assert "swallowed-fault" in names(lint("src/repro/core/x.py", bad))
+
+    def test_silent_on_typed_handler(self):
+        good = """
+            def f(x):
+                try:
+                    return 1 / x
+                except ZeroDivisionError:
+                    pass
+                return 0
+            """
+        assert "swallowed-fault" not in names(lint("src/repro/core/x.py", good))
+
+    def test_silent_on_handled_broad_exception(self):
+        good = """
+            def f(x):
+                try:
+                    return 1 / x
+                except Exception as e:
+                    raise ValueError(f"bad input: {e}")
+            """
+        assert "swallowed-fault" not in names(lint("src/repro/core/x.py", good))
 
 
 class TestFloat64Promotion:

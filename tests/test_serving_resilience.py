@@ -1,0 +1,451 @@
+"""Fault-contained design serving: taxonomy, retry/deadline/breaker policy,
+non-finite containment, the seeded chaos harness, and the engine-level
+NaN-rollback guards (docs/serving.md)."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import popsim
+from repro.core.dopt import optimize
+from repro.ft.straggler import StragglerMonitor
+from repro.serving import (
+    ChaosConfig,
+    ChaosInjector,
+    CircuitBreaker,
+    ClientError,
+    DeadlineConfig,
+    DesignQuery,
+    DesignService,
+    NumericFault,
+    RetryPolicy,
+    TransientFault,
+    classify_exception,
+    nonfinite_in,
+    run_guarded,
+)
+from repro.serving.chaos import poison
+from repro.workloads import get_workload
+
+
+class FakeClock:
+    """Deterministic time source: sleep() advances the clock."""
+
+    def __init__(self):
+        self.t = 0.0
+        self.sleeps = []
+
+    def __call__(self):
+        return self.t
+
+    def sleep(self, s):
+        self.sleeps.append(s)
+        self.t += s
+
+
+# --------------------------------------------------------------------------- #
+# taxonomy + guarded-call policy (no engine involved)
+# --------------------------------------------------------------------------- #
+
+
+class TestTaxonomy:
+    def test_classify_maps_foreign_exceptions(self):
+        assert classify_exception(ValueError("x")).code == "client-error"
+        assert classify_exception(KeyError("x")).code == "client-error"
+        assert classify_exception(FloatingPointError("x")).code == "numeric"
+        assert classify_exception(RuntimeError("x")).code == "transient"
+
+    def test_typed_faults_pass_through(self):
+        f = TransientFault("boom")
+        assert classify_exception(f) is f
+
+    def test_retryable_bits(self):
+        assert TransientFault.retryable and NumericFault.retryable
+        assert not ClientError.retryable
+
+
+class TestRunGuarded:
+    def _policy(self):
+        return RetryPolicy(max_attempts=4, base_s=0.01)
+
+    def test_retry_recovers_with_deterministic_backoff(self):
+        clk = FakeClock()
+        calls = []
+
+        def fn(attempt):
+            calls.append(attempt)
+            if attempt < 2:
+                raise TransientFault("flaky")
+            return "answer"
+
+        pol = self._policy()
+        out = run_guarded(fn, policy=pol, deadline_s=10.0, token=42,
+                          clock=clk, sleep=clk.sleep, validate=None)
+        assert out.ok and out.result == "answer"
+        assert out.attempts == 3 and out.retries == 2
+        assert calls == [0, 1, 2]
+        # backoff schedule is a pure function of (policy, token, retry index)
+        assert clk.sleeps == [pol.backoff_s(0, 42), pol.backoff_s(1, 42)]
+
+    def test_backoff_replays_identically(self):
+        pol = self._policy()
+        a = [pol.backoff_s(i, token=7) for i in range(4)]
+        b = [pol.backoff_s(i, token=7) for i in range(4)]
+        assert a == b
+        assert a != [pol.backoff_s(i, token=8) for i in range(4)]  # jitter keyed on token
+
+    def test_client_error_never_retried(self):
+        clk = FakeClock()
+        calls = []
+
+        def fn(attempt):
+            calls.append(attempt)
+            raise ValueError("bad input")
+
+        out = run_guarded(fn, policy=self._policy(), deadline_s=10.0,
+                          clock=clk, sleep=clk.sleep, validate=None)
+        assert not out.ok and out.fault.code == "client-error"
+        assert calls == [0] and clk.sleeps == []
+
+    def test_exhausted_attempts_degrade(self):
+        clk = FakeClock()
+        out = run_guarded(lambda a: (_ for _ in ()).throw(TransientFault("always")),
+                          policy=self._policy(), deadline_s=10.0,
+                          clock=clk, sleep=clk.sleep, validate=None)
+        assert not out.ok and out.fault.code == "transient"
+        assert out.attempts == 4 and len(clk.sleeps) == 3
+
+    def test_late_answer_is_deadline_exceeded(self):
+        clk = FakeClock()
+
+        def fn(attempt):
+            clk.t += 5.0  # the work itself blows the budget
+            return "late"
+
+        out = run_guarded(fn, policy=self._policy(), deadline_s=2.0,
+                          clock=clk, sleep=clk.sleep, validate=None)
+        assert not out.ok and out.fault.code == "deadline-exceeded"
+        assert out.attempts == 1
+
+    def test_backoff_never_burns_exhausted_budget(self):
+        # remaining budget cannot cover the pause -> degrade immediately,
+        # without sleeping
+        clk = FakeClock()
+        pol = RetryPolicy(max_attempts=4, base_s=1.0, jitter=0.5)
+        out = run_guarded(lambda a: (_ for _ in ()).throw(TransientFault("x")),
+                          policy=pol, deadline_s=0.2, clock=clk, sleep=clk.sleep,
+                          validate=None)
+        assert not out.ok and out.fault.code == "deadline-exceeded"
+        assert clk.sleeps == []
+
+    def test_validation_failure_retries_as_numeric(self):
+        clk = FakeClock()
+
+        def fn(attempt):
+            return "poisoned" if attempt == 0 else "clean"
+
+        out = run_guarded(fn, policy=self._policy(), deadline_s=10.0,
+                          clock=clk, sleep=clk.sleep,
+                          validate=lambda r: "field" if r == "poisoned" else None)
+        assert out.ok and out.result == "clean" and out.attempts == 2
+
+    def test_never_raises(self):
+        out = run_guarded(lambda a: (_ for _ in ()).throw(MemoryError("oom")),
+                          policy=self._policy(), deadline_s=1.0,
+                          clock=FakeClock(), sleep=lambda s: None, validate=None)
+        assert not out.ok and out.fault.code == "transient"
+
+
+class TestDeadlineConfig:
+    def test_cold_vs_warm_and_optimize_scale(self):
+        d = DeadlineConfig(warm_s=2.0, cold_s=30.0, optimize_scale=4.0)
+        assert d.budget_s(cold=True) == 30.0
+        assert d.budget_s(cold=False) == 2.0
+        assert d.budget_s(cold=False, kind="optimize") == 8.0
+        assert d.budget_s(cold=True, kind="frontier") == 120.0
+
+
+class TestCircuitBreaker:
+    def test_trips_cools_down_and_half_open_recovers(self):
+        clk = FakeClock()
+        br = CircuitBreaker(failure_threshold=3, cooldown_s=5.0, clock=clk)
+        for _ in range(3):
+            assert br.allow("k")
+            br.record("k", ok=False)
+        assert not br.allow("k")  # open: fast-fail
+        clk.t += 6.0
+        assert br.allow("k")  # half-open probe
+        br.record("k", ok=True)  # probe succeeds -> closed
+        assert br.allow("k")
+        snap = br.snapshot()["k"]
+        assert snap["trips"] == 1 and snap["rejected"] == 1 and not snap["open"]
+
+    def test_failed_probe_reopens(self):
+        clk = FakeClock()
+        br = CircuitBreaker(failure_threshold=2, cooldown_s=5.0, clock=clk)
+        br.record("k", ok=False)
+        br.record("k", ok=False)
+        clk.t += 6.0
+        assert br.allow("k")  # probe
+        br.record("k", ok=False)  # probe fails -> fresh cooldown
+        assert not br.allow("k")
+
+    def test_success_resets_consecutive_count(self):
+        br = CircuitBreaker(failure_threshold=2, clock=FakeClock())
+        br.record("k", ok=False)
+        br.record("k", ok=True)
+        br.record("k", ok=False)
+        assert br.allow("k")  # never reached 2 consecutive
+
+    def test_keys_are_independent(self):
+        clk = FakeClock()
+        br = CircuitBreaker(failure_threshold=1, cooldown_s=5.0, clock=clk)
+        br.record(("simulate", (1, 32)), ok=False)
+        assert not br.allow(("simulate", (1, 32)))
+        assert br.allow(("explain", (1, 32)))
+
+
+# --------------------------------------------------------------------------- #
+# non-finite containment + chaos schedule (engine results involved)
+# --------------------------------------------------------------------------- #
+
+
+@pytest.fixture(scope="module")
+def report():
+    from repro.api import Session, Workload
+
+    return Session("base").simulate(Workload("lstm"))
+
+
+class TestNonFiniteContainment:
+    def test_clean_report_passes(self, report):
+        assert nonfinite_in(report) is None
+
+    def test_poisoned_report_named(self, report):
+        assert nonfinite_in(poison(report)) == "area_mm2"
+
+    def test_nan_workload_field_named(self, report):
+        wl = dataclasses.replace(report.workloads[0], energy_j=float("nan"))
+        bad = dataclasses.replace(report, workloads=(wl, *report.workloads[1:]))
+        assert nonfinite_in(bad).endswith(".energy_j")
+
+    def test_infinite_budgets_are_valid(self, report):
+        # inf is the canonical spelling of "no budget" — must not be flagged
+        assert nonfinite_in(report) is None
+
+
+class TestChaosInjector:
+    CFG = ChaosConfig(seed=99, p_transient=0.5, p_compile_fail=0.3,
+                      p_nan=0.4, p_latency=0.3)
+
+    def test_schedule_is_seed_deterministic(self):
+        a = ChaosInjector(self.CFG).schedule(range(32))
+        b = ChaosInjector(self.CFG).schedule(range(32))
+        assert [p.to_json() for p in a] == [p.to_json() for p in b]
+        c = ChaosInjector(dataclasses.replace(self.CFG, seed=100)).schedule(range(32))
+        assert [p.to_json() for p in a] != [p.to_json() for p in c]
+
+    def test_plan_is_order_independent(self):
+        inj = ChaosInjector(self.CFG)
+        first = inj.plan(7)
+        for q in (3, 11, 0):
+            inj.plan(q)
+        assert inj.plan(7) == first
+
+    def test_faults_consume_leading_attempts_only(self):
+        # any plan clears within min_attempts -- the availability==1.0 gate
+        inj = ChaosInjector(self.CFG, sleep=lambda s: None)
+        for p in inj.schedule(range(16)):
+            assert p.min_attempts <= 4  # depth=1: at most 3 faulted attempts
+            for attempt in range(p.min_attempts - 1):
+                with pytest.raises(TransientFault):
+                    if inj.call(lambda: "clean", qid=p.qid, attempt=attempt) == "clean":
+                        raise TransientFault("nan attempts return poisoned, not clean")
+            assert inj.call(lambda: "clean", qid=p.qid, attempt=p.min_attempts - 1) == "clean"
+
+
+# --------------------------------------------------------------------------- #
+# the service: isolation, quarantine, breaker degradation, chaos gates
+# --------------------------------------------------------------------------- #
+
+
+def _mixed_queries(n=8):
+    kinds = ("simulate", "explain")
+    loads = ("lstm", "merge_sort")  # same (1, 32) bucket: warm after 4 colds
+    return [DesignQuery(i, kinds[i % 2], loads[(i // 2) % 2]) for i in range(n)]
+
+
+class TestDesignService:
+    def test_per_query_isolation(self):
+        svc = DesignService("base")
+        queries = [
+            DesignQuery(0, "simulate", "lstm"),
+            DesignQuery(1, "decompile", "lstm"),  # unknown kind
+            DesignQuery(2, "simulate", "no_such_workload"),  # poison intake
+            DesignQuery(3, "explain", "lstm"),
+        ]
+        replies = svc.serve(queries)
+        assert [r.qid for r in replies] == [0, 1, 2, 3]
+        assert [r.ok for r in replies] == [True, False, False, True]
+        assert replies[1].error.code == "client-error"
+        assert "decompile" in replies[1].error.message
+        assert replies[2].error.code == "client-error"
+        st = svc.stats
+        assert st.queries == 4 and st.ok == 2 and st.errors == {"client-error": 2}
+        assert st.availability == 0.5
+
+    def test_submit_never_raises_even_on_malformed_query(self):
+        svc = DesignService("base")
+        r = svc.submit(DesignQuery(0, "simulate", object()))  # unresolvable workload
+        assert not r.ok and r.error.code == "client-error"
+
+    def test_client_errors_do_not_trip_breaker(self):
+        svc = DesignService("base",
+                            breaker=CircuitBreaker(failure_threshold=1, cooldown_s=1e9))
+        svc.serve([DesignQuery(i, "bogus", "lstm") for i in range(5)])
+        assert svc.stats.degraded == 0
+
+    def test_breaker_degrades_after_consecutive_failures(self):
+        # depth >= max_attempts: every attempt of every query raises, so the
+        # (kind, bucket) lane accumulates consecutive failures and trips
+        chaos = ChaosInjector(ChaosConfig(seed=1, p_transient=1.0, depth=8))
+        svc = DesignService(
+            "base", chaos=chaos,
+            retry=RetryPolicy(max_attempts=2, base_s=0.001),
+            breaker=CircuitBreaker(failure_threshold=2, cooldown_s=1e9),
+        )
+        replies = svc.serve([DesignQuery(i, "simulate", "lstm") for i in range(5)])
+        assert [r.ok for r in replies] == [False] * 5
+        assert [r.error.code for r in replies] == \
+            ["transient", "transient", "circuit-open", "circuit-open", "circuit-open"]
+        st = svc.stats
+        assert st.degraded == 3 and st.errors["circuit-open"] == 3
+        (bstate,) = st.breakers.values()
+        assert bstate["open"] and bstate["trips"] == 1 and bstate["rejected"] == 3
+
+    def test_transient_chaos_clears_at_full_availability(self):
+        chaos = ChaosInjector(
+            ChaosConfig(seed=5, p_transient=0.5, p_compile_fail=0.3),
+            sleep=lambda s: None,
+        )
+        svc = DesignService("base", chaos=chaos,
+                            retry=RetryPolicy(max_attempts=4, base_s=0.001))
+        replies = svc.serve(_mixed_queries(8))
+        assert all(r.ok for r in replies)
+        assert svc.stats.availability == 1.0
+        assert svc.stats.retries > 0  # chaos actually fired
+
+    def test_chaos_replay_is_deterministic(self):
+        cfg = ChaosConfig(seed=11, p_transient=0.4, p_compile_fail=0.2, p_nan=0.3)
+
+        def one_run():
+            inj = ChaosInjector(cfg, sleep=lambda s: None)
+            svc = DesignService("base", chaos=inj,
+                                retry=RetryPolicy(max_attempts=4, base_s=0.001))
+            replies = svc.serve(_mixed_queries(8))
+            sched = [p.to_json() for p in inj.schedule(range(8))]
+            outcomes = [(r.qid, r.ok, r.attempts,
+                         r.error.code if r.error else None) for r in replies]
+            results = {r.qid: r.result.to_json() for r in replies if r.ok}
+            return sched, outcomes, results, svc.stats.availability
+
+        assert one_run() == one_run()
+
+    def test_chaos_leaves_clean_queries_bit_identical(self):
+        queries = _mixed_queries(8)
+        base = {r.qid: r.result.to_json()
+                for r in DesignService("base").serve(queries) if r.ok}
+        inj = ChaosInjector(
+            ChaosConfig(seed=2, p_transient=0.4, p_nan=0.4), sleep=lambda s: None
+        )
+        svc = DesignService("base", chaos=inj,
+                            retry=RetryPolicy(max_attempts=4, base_s=0.001))
+        replies = svc.serve(queries)
+        clean = {p.qid for p in inj.schedule(range(8)) if p.clean}
+        assert clean, "seed must leave some queries untouched"
+        for r in replies:
+            if r.qid in clean and r.ok:
+                assert r.result.to_json() == base[r.qid]
+
+    def test_cold_compiles_reprime_not_flag(self):
+        svc = DesignService("base")
+        replies = svc.serve(_mixed_queries(8))
+        assert all(r.ok for r in replies)
+        assert any(r.compiled for r in replies)  # cold shapes were paid
+        # the ~1000x cold/warm gap must not register as straggling
+        assert not any(r.straggler for r in replies if r.compiled)
+
+    def test_per_query_deadline_override(self):
+        svc = DesignService("base")
+        r = svc.submit(DesignQuery(0, "simulate", "lstm", deadline_s=123.0))
+        assert r.deadline_s == 123.0
+
+
+class TestStragglerWiring:
+    def test_reprime_resets_baseline(self):
+        m = StragglerMonitor()
+        m.reprime(1.0)  # a cold compile lands as the new steady state
+        assert m.ewma == 1.0 and not m.flagged
+        m.reprime(0.001)  # warm regime re-primed
+        assert not m.record(1, 0.0011)  # nominal warm step
+        for i in range(2, 6):
+            m.record(i, 0.001)
+        assert m.record(99, 1.0)  # genuine warm outlier is flagged
+        assert m.flagged[-1][0] == 99
+
+
+# --------------------------------------------------------------------------- #
+# engine guards: dopt rollback, popsim divergence containment
+# --------------------------------------------------------------------------- #
+
+
+@pytest.fixture(scope="module")
+def lstm():
+    return get_workload("lstm")
+
+
+class TestDOptRollback:
+    def test_nan_epochs_roll_back_to_last_finite_state(self, lstm):
+        # Poisoning every epoch after k must leave the descent bit-equal to
+        # stopping at k: faulted steps select the previous state exactly
+        # (jnp.where), and the same chunked program keeps arithmetic
+        # bit-reproducible across both runs.
+        clean = optimize(lstm, objective="edp", steps=6, lr=0.1, chunk=3)
+        faulted = optimize(lstm, objective="edp", steps=12, lr=0.1, chunk=3,
+                           nan_epochs=tuple(range(6, 12)))
+        for a, b in zip(jax.tree.leaves(clean.tech.__dict__),
+                        jax.tree.leaves(faulted.tech.__dict__)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert faulted.history["fault"] == [0.0] * 6 + [1.0] * 6
+        for key in ("edp", "runtime", "energy"):
+            assert np.isfinite(faulted.history[key]).all()
+
+    def test_fault_free_history_has_no_fault_flags(self, lstm):
+        res = optimize(lstm, objective="edp", steps=4, lr=0.1, chunk=2)
+        assert res.history["fault"] == [0.0] * 4
+
+    def test_lr_backoff_halves_and_recovers(self, lstm):
+        # one poisoned epoch mid-run: the run still ends finite and improves
+        res = optimize(lstm, objective="edp", steps=10, lr=0.1, chunk=5,
+                       nan_epochs=(4,))
+        assert res.history["fault"][4] == 1.0
+        assert np.isfinite(res.history["edp"]).all()
+        assert res.history["edp"][-1] < res.history["edp"][0]
+
+
+class TestPopsimContainment:
+    def test_diverged_member_is_infeasible_and_off_front(self, lstm, monkeypatch):
+        real = popsim.population_log_metrics
+
+        def corrupting(tech, arch, gstack, spec, mcfg):
+            logm, area, power = real(tech, arch, gstack, spec, mcfg)
+            logm = np.asarray(logm).copy()
+            logm[0, :] = np.nan  # member 0 "diverged"
+            return logm, area, power
+
+        monkeypatch.setattr(popsim, "population_log_metrics", corrupting)
+        res = popsim.pareto_dse(lstm, population=6, steps=2, key=0)
+        assert not res.feasible[0]
+        assert 0 not in res.front
+        assert np.isfinite(res.hypervolume)

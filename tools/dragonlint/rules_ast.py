@@ -545,6 +545,51 @@ def stray_debug(rel: str, text: str, tree: ast.AST) -> Iterator[Finding]:
 
 
 # --------------------------------------------------------------------------- #
+# serving-contract rule: swallowed-fault
+# --------------------------------------------------------------------------- #
+
+_BROAD_EXC = {"Exception", "BaseException", "builtins.Exception", "builtins.BaseException"}
+
+
+def _only_pass(body: list) -> bool:
+    """True when a handler body does nothing: ``pass`` / ``...`` / a bare
+    docstring — no logging, no typed re-packaging, no re-raise."""
+    for stmt in body:
+        if isinstance(stmt, ast.Pass):
+            continue
+        if isinstance(stmt, ast.Expr) and isinstance(stmt.value, ast.Constant):
+            continue
+        return False
+    return True
+
+
+@rule(
+    "swallowed-fault",
+    doc="bare 'except:' and 'except Exception: pass' silently swallow faults — "
+        "the resilience layer needs every failure typed, logged, or re-raised",
+    scan=("src/",),
+)
+def swallowed_fault(rel: str, text: str, tree: ast.AST) -> Iterator[Finding]:
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.ExceptHandler):
+            continue
+        if node.type is None:
+            yield Finding("swallowed-fault", rel, node.lineno,
+                          "bare 'except:' catches everything (KeyboardInterrupt "
+                          "included) and hides the fault class — catch a typed "
+                          "exception or classify via repro.serving.resilience",
+                          _line(text, node.lineno))
+            continue
+        types = [node.type] if not isinstance(node.type, ast.Tuple) else list(node.type.elts)
+        broad = any(_dotted(t) in _BROAD_EXC for t in types)
+        if broad and _only_pass(node.body):
+            yield Finding("swallowed-fault", rel, node.lineno,
+                          "'except Exception: pass' swallows the fault with no "
+                          "trace — type it, log it, re-raise, or degrade to a "
+                          "structured error reply", _line(text, node.lineno))
+
+
+# --------------------------------------------------------------------------- #
 # serving-contract rule: float64-promotion
 # --------------------------------------------------------------------------- #
 
