@@ -119,10 +119,20 @@ __all__ = [
 _MIN_BUCKET = 32  # below this the mapper's auto dispatch flips impls; also
 # keeps tiny-workload buckets from fragmenting the program cache
 
+_MIN_REQUEST_BUCKET = 2  # batched dispatches pad the request axis to pow2;
+# below 2 the sequential program is already the right shape
+
 
 def _bucket_vertices(v: int) -> int:
     """Vertex-axis bucket: next power of two, at least ``_MIN_BUCKET``."""
     return max(_MIN_BUCKET, 1 << (max(v, 1) - 1).bit_length())
+
+
+def _bucket_requests(n: int) -> int:
+    """Request-axis bucket for batched dispatches: next power of two, at
+    least ``_MIN_REQUEST_BUCKET`` — same convention as the vertex axis, so
+    warm batches of similar size replay one compiled program."""
+    return max(_MIN_REQUEST_BUCKET, 1 << (max(n, 1) - 1).bit_length())
 
 
 def _dhd_ident(name: str) -> str:
@@ -350,15 +360,24 @@ class CacheStats:
     traces: int
 
 
+_ARCH_PARAM_NAMES: list[str] | None = None
+
+
 def _arch_param_names() -> list[str]:
-    names = []
-    for f in dataclasses.fields(ArchParams):
-        n = np.asarray(getattr(ArchParams.default(), f.name)).size
-        if n == 1:
-            names.append(f.name)
-        else:
-            names.extend(f"{cls}.{f.name}" for cls in MEM_CLS[:n])
-    return names
+    # memoized: building ArchParams.default() materializes device arrays,
+    # ~15 of them — at ~1 ms a pop that was most of a warm explain() call
+    global _ARCH_PARAM_NAMES
+    if _ARCH_PARAM_NAMES is None:
+        default = ArchParams.default()
+        names = []
+        for f in dataclasses.fields(ArchParams):
+            n = np.asarray(getattr(default, f.name)).size
+            if n == 1:
+                names.append(f.name)
+            else:
+                names.extend(f"{cls}.{f.name}" for cls in MEM_CLS[:n])
+        _ARCH_PARAM_NAMES = names
+    return _ARCH_PARAM_NAMES
 
 
 def _flatten(tree) -> np.ndarray:
@@ -373,19 +392,35 @@ class Session:
     defaults to the library ``base`` design); per-call ``architecture=``
     overrides never invalidate the cache — parameter values are traced
     arguments, only a changed :class:`ArchSpec` keys a new program.
+
+    ``programs`` shares a compiled-program cache between sessions: pass
+    another session's :attr:`programs` (or a plain dict) and every program
+    one session compiles is warm for the others — the multi-tenant serving
+    arrangement, where N tenants must not mean N copies of every
+    executable.  Hit/miss/trace *stats* stay per-session (a shared program
+    counts as a hit for the session that finds it and traces only under
+    the session that built it).
     """
 
     _ids = itertools.count()
 
-    def __init__(self, architecture="base", *, mcfg: MapperCfg = MapperCfg()):
+    def __init__(self, architecture="base", *, mcfg: MapperCfg = MapperCfg(),
+                 programs: dict | None = None):
         self.architecture = Architecture(architecture)
         self.mcfg = mcfg
         self._tag = f"api.session{next(Session._ids)}"
-        self._programs: dict = {}  # key -> compiled callable (session programs)
+        # key -> compiled callable; shared across sessions when passed in
+        self._programs: dict = programs if programs is not None else {}
         self._engine_keys: set = set()  # engine-routed configs seen (bookkeeping)
         self._hits = 0
         self._misses = 0
         self._workload_memo: dict[str, Workload] = {}
+        self._arch_memo: dict[str, Architecture] = {}
+
+    @property
+    def programs(self) -> dict:
+        """The compiled-program cache — pass to another ``Session`` to share."""
+        return self._programs
 
     # ------------------------------------------------------------- helpers --
     def _arch(self, architecture) -> Architecture:
@@ -393,6 +428,13 @@ class Session:
             return self.architecture
         if isinstance(architecture, Architecture):
             return architecture
+        if isinstance(architecture, str):
+            # memoized like workloads: re-parsing a .dhd and materializing
+            # its params costs ~ms — far more than a warm dispatch
+            a = self._arch_memo.get(architecture)
+            if a is None:
+                a = self._arch_memo[architecture] = Architecture(architecture)
+            return a
         return Architecture(architecture)
 
     def _workload(self, workload) -> Workload:
@@ -486,6 +528,179 @@ class Session:
             return jax.jit(fn)
 
         return self._program(("explain", spec, mcfg, bucket, objective), build)
+
+    # ----------------------------------------------------- batched programs --
+    def _batched_report_program(self, nb: int, bucket, spec: ArchSpec, mcfg: MapperCfg):
+        """The report program with a leading *request* axis: one dispatch
+        answers ``nb`` same-bucket queries, each with its own (tech, arch,
+        gstack).  Keyed by the request bucket too, so warm batches of
+        similar size never retrace."""
+        tag = f"{self._tag}.report_batched"
+
+        def build():
+            def one(tech, arch, gstack):
+                return jax.vmap(
+                    lambda g: simulate_breakdown(tech, arch, g, spec, mcfg)
+                )(gstack)
+
+            def fn(techs, archs, gstacks):
+                instrument.count_trace(tag)
+                return jax.vmap(one)(techs, archs, gstacks)
+
+            return jax.jit(fn)
+
+        return self._program(("report_batched", spec, mcfg, bucket, nb), build)
+
+    def _batched_explain_program(
+        self, nb: int, bucket, spec: ArchSpec, mcfg: MapperCfg, objective: str
+    ):
+        """Elasticities with a leading request axis (vmapped grad)."""
+        tag = f"{self._tag}.explain_batched"
+
+        def build():
+            def one(tech, arch, gstack):
+                def loss(tz, az):
+                    val, _ = stacked_log_objective(
+                        from_log(tz), from_log(az), gstack, objective, spec=spec, mcfg=mcfg
+                    )
+                    return val
+
+                return jax.grad(loss, argnums=(0, 1))(to_log(tech), to_log(arch))
+
+            def fn(techs, archs, gstacks):
+                instrument.count_trace(tag)
+                return jax.vmap(one)(techs, archs, gstacks)
+
+            return jax.jit(fn)
+
+        return self._program(
+            ("explain_batched", spec, mcfg, bucket, objective, nb), build
+        )
+
+    def _assemble_batch(self, workloads, architectures, request_bucket=None):
+        """Validate + stack a request batch: every item must share the
+        session's spec and one shape bucket (that is what makes the stacks
+        structurally identical under one program).  Returns
+        ``(ws, archs, nb, stacked-pytrees)`` with the request axis padded to
+        the pow2 bucket by repeating lane 0 (padding lanes are computed and
+        discarded — same convention as vertex padding, minus the zero
+        pricing, because discarding is exact).
+
+        ``request_bucket`` pins the padded request axis instead of the
+        auto pow2 bucket.  XLA specializes reduction order to array shape,
+        so two *different* request buckets can differ in the last ulp;
+        serving pins one bucket across sequential and coalesced dispatches
+        precisely so replies are bit-identical however queries were
+        batched."""
+        ws = [self._workload(w) for w in workloads]
+        if not ws:
+            raise ValueError("batched call needs at least one workload")
+        if architectures is None:
+            archs = [self.architecture] * len(ws)
+        else:
+            archs = [self._arch(a) for a in architectures]
+        if len(archs) != len(ws):
+            raise ValueError(f"{len(archs)} architectures for {len(ws)} workloads")
+        bucket, spec = ws[0].bucket, archs[0].spec
+        for w in ws[1:]:
+            if w.bucket != bucket:
+                raise ValueError(
+                    f"batched call mixes shape buckets {bucket} and {w.bucket}; "
+                    "coalesce same-bucket queries only"
+                )
+        for a in archs[1:]:
+            if a.spec != spec:
+                raise ValueError("batched call mixes ArchSpecs; split by spec")
+        if request_bucket is None:
+            nb = _bucket_requests(len(ws))
+        else:
+            nb = int(request_bucket)
+            if nb < len(ws):
+                raise ValueError(
+                    f"request_bucket={nb} smaller than the batch ({len(ws)} queries)"
+                )
+        pad = nb - len(ws)
+        techs = jax.tree.map(
+            lambda *xs: jnp.stack(xs + (xs[0],) * pad), *[a.tech for a in archs]
+        )
+        arch_ps = jax.tree.map(
+            lambda *xs: jnp.stack(xs + (xs[0],) * pad), *[a.arch for a in archs]
+        )
+        gstacks = jax.tree.map(
+            lambda *xs: jnp.stack(xs + (xs[0],) * pad), *[w.stacked for w in ws]
+        )
+        return ws, archs, nb, (techs, arch_ps, gstacks)
+
+    def simulate_batch(
+        self, workloads, *, architectures=None, request_bucket=None
+    ) -> list[SimReport]:
+        """Answer N same-bucket simulate queries in ONE vmapped dispatch.
+
+        ``workloads`` is a list of anything :meth:`simulate` accepts;
+        ``architectures`` (optional, same length) gives each request its own
+        design point.  Every workload must share one shape bucket and every
+        architecture the session's ``ArchSpec``.  Reports are bit-identical
+        across batch compositions at one ``request_bucket`` — pinned by
+        test — the batch only amortizes dispatch overhead across requests.
+        """
+        ws, archs, nb, stacked = self._assemble_batch(
+            workloads, architectures, request_bucket
+        )
+        return self._simulate_batch_assembled(ws, archs, nb, stacked)
+
+    def _simulate_batch_assembled(self, ws, archs, nb, stacked) -> list[SimReport]:
+        techs, arch_ps, gstacks = stacked
+        prog = self._batched_report_program(nb, ws[0].bucket, archs[0].spec, self.mcfg)
+        perfs, extras = prog(techs, arch_ps, gstacks)
+        # one device->host sync for the whole batch, then numpy views per lane
+        perfs = jax.tree.map(np.asarray, perfs)
+        extras = {k: np.asarray(v) for k, v in extras.items()}
+        return [
+            self._build_report(
+                archs[i],
+                ws[i],
+                jax.tree.map(lambda x: x[i], perfs),
+                {k: v[i] for k, v in extras.items()},
+            )
+            for i in range(len(ws))
+        ]
+
+    def explain_batch(
+        self, workloads, *, objective: str = "edp", architectures=None,
+        request_bucket=None,
+    ) -> list[SimReport]:
+        """Batched :meth:`explain`: one vmapped report dispatch + one
+        vmapped gradient dispatch answer N same-bucket explain queries.
+        Reports (attribution included) are bit-identical across batch
+        compositions at one ``request_bucket``."""
+        ws, archs, nb, stacked = self._assemble_batch(
+            workloads, architectures, request_bucket
+        )
+        techs, arch_ps, gstacks = stacked
+        reports = self._simulate_batch_assembled(ws, archs, nb, stacked)
+        prog = self._batched_explain_program(
+            nb, ws[0].bucket, archs[0].spec, self.mcfg, objective
+        )
+        g_techs, g_archs = prog(techs, arch_ps, gstacks)
+        g_techs = jax.tree.map(np.asarray, g_techs)
+        g_archs = jax.tree.map(np.asarray, g_archs)
+        names = [f"tech.{n}" for n in tech_param_names()] + [
+            f"arch.{n}" for n in _arch_param_names()
+        ]
+        out = []
+        for i, rep in enumerate(reports):
+            elast = np.concatenate([
+                _flatten(jax.tree.map(lambda x: x[i], g_techs)),
+                _flatten(jax.tree.map(lambda x: x[i], g_archs)),
+            ])
+            ranked = sorted(zip(names, elast.tolist()), key=lambda kv: -abs(kv[1]))
+            attribution = tuple(
+                Attribution(parameter=n, elasticity=float(v)) for n, v in ranked
+            )
+            out.append(
+                dataclasses.replace(rep, objective=objective, attribution=attribution)
+            )
+        return out
 
     # ------------------------------------------------------------ simulate --
     def perf(self, workload, *, architecture=None) -> PerfEstimate:
@@ -754,6 +969,15 @@ class Session:
         bw_util = np.asarray(state.bw_util)
         ex = {k: np.asarray(v) for k, v in extras.items()}
         runtime = np.asarray(perfs.runtime)
+        # one host sync per field, outside the per-workload loop
+        energy = np.asarray(perfs.energy)
+        power = np.asarray(perfs.power)
+        edp = np.asarray(perfs.edp)
+        cycles = np.asarray(perfs.cycles)
+        energy_mem = np.asarray(perfs.energy_mem)
+        energy_comp = np.asarray(perfs.energy_comp)
+        energy_leak = np.asarray(perfs.energy_leak)
+        area = np.asarray(perfs.area)
         workloads = []
         for i, (lbl, g) in enumerate(zip(w.labels, w.graphs)):
             v = g.n_vertices
@@ -794,13 +1018,13 @@ class Session:
                 WorkloadReport(
                     label=lbl,
                     runtime_s=rt,
-                    energy_j=float(np.asarray(perfs.energy)[i]),
-                    power_w=float(np.asarray(perfs.power)[i]),
-                    edp=float(np.asarray(perfs.edp)[i]),
-                    cycles=float(np.asarray(perfs.cycles)[i]),
-                    energy_mem_j=float(np.asarray(perfs.energy_mem)[i]),
-                    energy_comp_j=float(np.asarray(perfs.energy_comp)[i]),
-                    energy_leak_j=float(np.asarray(perfs.energy_leak)[i]),
+                    energy_j=float(energy[i]),
+                    power_w=float(power[i]),
+                    edp=float(edp[i]),
+                    cycles=float(cycles[i]),
+                    energy_mem_j=float(energy_mem[i]),
+                    energy_comp_j=float(energy_comp[i]),
+                    energy_leak_j=float(energy_leak[i]),
                     levels=levels,
                     compute=compute,
                     vertices=vertices,
@@ -809,6 +1033,6 @@ class Session:
         return SimReport(
             architecture=a.name,
             objective="",
-            area_mm2=float(np.asarray(perfs.area)[0]),
+            area_mm2=float(area[0]),
             workloads=tuple(workloads),
         )

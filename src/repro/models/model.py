@@ -390,9 +390,24 @@ class Model:
         )
 
     # ------------------------------------------------------------ prefill --
-    def prefill(self, params, tokens, *, max_len: int, vision=None, mesh=None):
-        """Process the prompt; returns (last_logits [B,(ncb,)V], cache)."""
+    def prefill(self, params, tokens, *, max_len: int, vision=None, mesh=None,
+                length=None):
+        """Process the prompt; returns (last_logits [B,(ncb,)V], cache).
+
+        ``length`` (optional, may be traced) is the true prompt length when
+        ``tokens`` is right-padded to a shape bucket: the head runs at
+        position ``length - 1`` and ``cache["len"]`` is set to ``length``,
+        so decode's length-masked attention never sees the padding's k/v
+        rows.  Exact for causal kv-cache families only — SSM/hybrid prefill
+        folds every position into the recurrent state, so bucketing would
+        corrupt it; serving keeps exact-length prefill there.
+        """
         cfg = self.cfg
+        if length is not None and cfg.family in ("ssm", "hybrid"):
+            raise ValueError(
+                f"bucketed prefill (length=) is invalid for family {cfg.family!r}: "
+                "recurrent state absorbs padded positions"
+            )
         B, Sq = tokens.shape[:2]
         h, _, caches = self.forward(
             params, tokens, vision=vision, mesh=mesh, collect_cache=True,
@@ -400,8 +415,15 @@ class Model:
         )
         # head only at the last position: full [B, S, V] logits are never
         # needed for prefill and don't fit at 32k x 152k vocab
-        logits = T.lm_logits(cfg, params, h[:, -1:], mesh)
-        cache = {"len": jnp.full((B,), Sq, jnp.int32)}
+        if length is None:
+            last_h = h[:, -1:]
+            true_len = Sq
+        else:
+            # causal attention: position length-1 never attends the padding
+            last_h = jax.lax.dynamic_slice_in_dim(h, length - 1, 1, axis=1)
+            true_len = length
+        logits = T.lm_logits(cfg, params, last_h, mesh)
+        cache = {"len": jnp.full((B,), true_len, jnp.int32)}
         if "k" in caches:
             pad = max_len - Sq
             cache["k"] = jnp.pad(caches["k"], ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))

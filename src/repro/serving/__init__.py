@@ -1,5 +1,7 @@
+from repro.serving.batching import FlushPolicy, IntakeQueue  # noqa: F401
 from repro.serving.chaos import ChaosConfig, ChaosInjector, FaultPlan  # noqa: F401
 from repro.serving.engine import (  # noqa: F401
+    BatchingDesignService,
     DesignQuery,
     DesignReply,
     DesignService,

@@ -59,18 +59,53 @@ class Request:
     t_done: float = 0.0
 
 
+_MIN_PROMPT_BUCKET = 8
+
+
+def _bucket_prompt(s: int) -> int:
+    """Prompt-length bucket: next power of two, at least
+    ``_MIN_PROMPT_BUCKET`` — a handful of compiled prefill programs instead
+    of one per distinct prompt length."""
+    return max(_MIN_PROMPT_BUCKET, 1 << (max(s, 1) - 1).bit_length())
+
+
 class Engine:
     def __init__(self, model: Model, params, *, slots: int = 4, max_len: int = 512, mesh=None):
         self.model, self.params = model, params
         self.slots, self.max_len = slots, max_len
         self.mesh = mesh
         cfg = model.cfg
+        # prompt bucketing is exact only for causal kv-cache families: the
+        # true length is traced data (head slice + cache["len"]), so decode's
+        # length-masked attention never reads a padded position.  Recurrent
+        # (ssm/hybrid) prefill folds every position into the state — those
+        # keep exact-length prefill and pay one trace per distinct length.
+        self._bucket_prompts = model.cache_dims()["kind"] in ("kv", "kv+x")
         self._prefill = jax.jit(
+            lambda p, t, n, v=None: model.prefill(
+                p, t, max_len=max_len, vision=v, mesh=mesh, length=n
+            )
+        )
+        self._prefill_exact = jax.jit(
             lambda p, t, v=None: model.prefill(p, t, max_len=max_len, vision=v, mesh=mesh)
         )
         self._decode = jax.jit(
             lambda p, t, c: model.decode_step(p, t, c, mesh=mesh), donate_argnums=(2,)
         )
+
+        # slot admission as ONE compiled program (slot index is traced data):
+        # donation updates the big cache buffers in place instead of copying
+        # the whole slots-times-larger cache per admit
+        def write(cache, src, slot):
+            def wr(dst, s):
+                if dst.ndim == 1:  # len
+                    return dst.at[slot].set(s[0])
+                # batch dim position differs per leaf kind: [L, B, ...] vs [B]
+                return dst.at[:, slot].set(s[:, 0])
+
+            return jax.tree.map(wr, cache, src)
+
+        self._write = jax.jit(write, donate_argnums=(0,))
         self.cache = model.init_cache(slots, max_len)
         self.slot_req: list[Optional[Request]] = [None] * slots
         self.queue: list[Request] = []
@@ -88,13 +123,8 @@ class Engine:
     # ------------------------------------------------------- cache plumb --
     def _write_slot(self, slot: int, src_cache, src_b: int = 0):
         """Copy one request's prefill cache (batch 1) into slot ``slot``."""
-        def wr(dst, src):
-            if dst.ndim == 1:  # len
-                return dst.at[slot].set(src[src_b])
-            # batch dim position differs per leaf kind: [L, B, ...] vs [B]
-            return dst.at[:, slot].set(src[:, src_b])
-
-        self.cache = jax.tree.map(wr, self.cache, src_cache)
+        del src_b  # prefill serves batch 1; kept for call-site compatibility
+        self.cache = self._write(self.cache, src_cache, slot)
 
     # --------------------------------------------------------------- step --
     def step(self):
@@ -105,11 +135,19 @@ class Engine:
         for slot in range(self.slots):
             if self.slot_req[slot] is None and self.queue:
                 req = self.queue.pop(0)
-                toks = jnp.asarray(req.prompt)[None]
+                prompt = np.asarray(req.prompt)
                 vis = None
                 if cfg.vision:
                     vis = jnp.zeros((1, cfg.vision.n_patches, cfg.vision.d_vision), jnp.float32)
-                logits, cache1 = self._prefill(self.params, toks, vis)
+                if self._bucket_prompts:
+                    s = prompt.shape[0]
+                    sb = min(self.max_len, _bucket_prompt(s))
+                    if sb > s:
+                        pad = ((0, sb - s),) + ((0, 0),) * (prompt.ndim - 1)
+                        prompt = np.pad(prompt, pad)
+                    logits, cache1 = self._prefill(self.params, jnp.asarray(prompt)[None], s, vis)
+                else:
+                    logits, cache1 = self._prefill_exact(self.params, jnp.asarray(prompt)[None], vis)
                 self._write_slot(slot, cache1)
                 tok = self._sample(req, np.asarray(logits)[0])
                 req.t_first = time.time()
@@ -149,7 +187,12 @@ class Engine:
         """logits: [V] or [ncb, V]."""
         if req.temperature <= 0.0:
             return logits.argmax(-1).astype(np.int32)
-        key = jax.random.PRNGKey(req.seed + len(req.generated))
+        # fold (rid, position) into the stream: integer *addition* made
+        # adjacent seeds share one gumbel stream at an offset
+        key = jax.random.fold_in(
+            jax.random.fold_in(jax.random.PRNGKey(req.seed), req.rid),
+            len(req.generated),
+        )
         g = np.asarray(jax.random.gumbel(key, logits.shape))
         return (logits / req.temperature + g).argmax(-1).astype(np.int32)
 
@@ -176,6 +219,7 @@ class DesignQuery:
     objective: str = "edp"
     params: dict = field(default_factory=dict)
     deadline_s: Optional[float] = None
+    tenant: Optional[str] = None  # None = the service's default session
 
 
 @dataclass
@@ -197,6 +241,8 @@ class DesignReply:
     attempts: int = 1
     deadline_s: float = float("inf")  # the budget this query was held to
     straggler: bool = False  # flagged by the latency monitor (warm path only)
+    batched: bool = False  # answered from a coalesced cross-request dispatch
+    batch_size: int = 1  # queries sharing that dispatch (1 = sequential)
 
 
 @dataclass(frozen=True)
@@ -216,11 +262,30 @@ class ServiceStats:
     errors: dict  # fault code -> count
     stragglers: tuple  # (qid, wall_s) pairs flagged by the latency monitor
     breakers: dict  # (kind, bucket) -> breaker state snapshot
+    batches: int = 0  # coalesced dispatches flushed (batching service only)
+    batched_queries: int = 0  # queries answered from a coalesced dispatch
+    tenants: int = 1  # sessions sharing this service's program cache
 
     @property
     def availability(self) -> float:
         """Fraction of queries answered ok within their deadline."""
         return self.ok / self.queries if self.queries else 1.0
+
+
+@dataclass
+class _Admitted:
+    """A query that cleared intake: resolved inputs + the guard parameters
+    :meth:`DesignService._complete` needs.  The seam between sequential
+    answering and the batching layer's coalesced dispatch."""
+
+    q: DesignQuery
+    t0: float
+    w: Any  # resolved Workload
+    arch: Any  # resolved Architecture
+    sess: Any  # the tenant's Session
+    bkey: tuple  # circuit-breaker lane (kind, bucket)
+    shape: tuple  # warmth key (kind, spec, bucket, objective)
+    deadline: float
 
 
 class DesignService:
@@ -265,11 +330,23 @@ class DesignService:
                  deadlines: Optional[DeadlineConfig] = None,
                  breaker: Optional[CircuitBreaker] = None, chaos=None,
                  monitor=None, clock=time.monotonic, sleep=time.sleep,
-                 **session_kw):
+                 request_bucket: int = 8, **session_kw):
         from repro.api import Session
         from repro.ft.straggler import StragglerMonitor
 
         self.session = Session(architecture, **session_kw)
+        self._default_architecture = architecture
+        self._session_kw = dict(session_kw)
+        self._session_kw.pop("programs", None)
+        # every serving dispatch — sequential or coalesced — pads its request
+        # axis to this one bucket, so ONE compiled program serves every batch
+        # size and replies are bit-identical however queries were batched
+        # (XLA specializes reduction order to shape; two request buckets can
+        # differ in the last ulp)
+        self.request_bucket = int(request_bucket)
+        # tenant name -> Session; all share self.session's compiled programs,
+        # each keeps its own stats/workload memos (per-tenant isolation)
+        self._tenants: dict = {}
         self.retry = retry or RetryPolicy()
         self.deadlines = deadlines or DeadlineConfig()
         self.breaker = breaker or CircuitBreaker(clock=clock)
@@ -285,6 +362,29 @@ class DesignService:
         self._deadline_misses = 0
         self._degraded = 0
         self._errors: dict = {}
+        self._batches = 0
+        self._batched_queries = 0
+
+    # ------------------------------------------------------------ tenants --
+    def _session_for(self, tenant: Optional[str]):
+        """The tenant's own :class:`~repro.api.Session` over the shared
+        compiled-program cache — a program any tenant compiles is warm for
+        every other, but stats and memos never leak across tenants."""
+        if tenant is None:
+            return self.session
+        sess = self._tenants.get(tenant)
+        if sess is None:
+            from repro.api import Session
+
+            sess = self._tenants[tenant] = Session(
+                self._default_architecture,
+                programs=self.session.programs,
+                **self._session_kw,
+            )
+        return sess
+
+    def _sessions(self):
+        return [self.session, *self._tenants.values()]
 
     # ------------------------------------------------------------- intake --
     def submit(self, q: DesignQuery) -> DesignReply:
@@ -293,16 +393,8 @@ class DesignService:
         degrades to a structured ``ok=False`` reply."""
         try:
             reply = self._answer(q)
-        except Exception as e:  # last-ditch isolation: a bug in the guard
-            # stack itself must still cost only this one query
-            fault = classify_exception(e)
-            reply = DesignReply(
-                qid=getattr(q, "qid", -1), kind=getattr(q, "kind", "?"),
-                wall_s=0.0, compiled=False, result=None, ok=False,
-                error=FaultInfo(code=fault.code, message=str(fault),
-                                attempts=1, retryable=fault.retryable),
-                attempts=1, deadline_s=0.0,
-            )
+        except Exception as e:
+            reply = self._last_ditch(q, e)
         self._account(reply)
         self.replies.append(reply)
         return reply
@@ -314,6 +406,17 @@ class DesignService:
 
     # ------------------------------------------------------------- answer --
     def _answer(self, q: DesignQuery) -> DesignReply:
+        adm = self._prepare(q)
+        if isinstance(adm, DesignReply):
+            return adm
+        return self._complete(adm)
+
+    def _prepare(self, q: DesignQuery):
+        """Intake: validate, resolve, consult the breaker and predict the
+        deadline.  Returns a refusal :class:`DesignReply`, or an
+        :class:`_Admitted` record ready for :meth:`_complete` — the batching
+        layer runs intake for a whole flush before any engine work, so a
+        poison query is quarantined before it can join a batch."""
         t0 = self._clock()
         if q.kind not in self._KINDS:
             return self._refuse(q, t0, ClientError(
@@ -322,9 +425,10 @@ class DesignService:
         # intake quarantine: resolve + validate inputs before any engine work
         # (Workload/Architecture reject non-finite tensors, empty sets and
         # malformed .dhd at construction)
+        sess = self._session_for(q.tenant)
         try:
-            w = self.session._workload(q.workload)
-            arch = self.session._arch(q.architecture)
+            w = sess._workload(q.workload)
+            arch = sess._arch(q.architecture)
         except Exception as e:
             return self._refuse(q, t0, ClientError(
                 f"poison query quarantined at intake: {type(e).__name__}: {e}"
@@ -339,7 +443,17 @@ class DesignService:
         cold = shape not in self._warm
         deadline = q.deadline_s if q.deadline_s is not None else \
             self.deadlines.budget_s(cold, q.kind)
-        handler = self._handler(q, w, arch)
+        return _Admitted(q=q, t0=t0, w=w, arch=arch, sess=sess, bkey=bkey,
+                         shape=shape, deadline=deadline)
+
+    def _complete(self, adm: "_Admitted", handler: Optional[Callable[[], Any]] = None,
+                  *, batched: bool = False, batch_size: int = 1) -> DesignReply:
+        """Run one admitted query through the guard stack.  ``handler``
+        overrides the sequential engine call — the batching layer passes a
+        closure that reads this query's lane of a coalesced dispatch."""
+        q = adm.q
+        if handler is None:
+            handler = self._handler(q, adm.w, adm.arch, adm.sess)
         if self.chaos is not None:
             chaos, qid = self.chaos, q.qid
 
@@ -349,13 +463,18 @@ class DesignService:
             def fn(attempt):
                 return handler()
         traces0 = self._traces()
-        out = run_guarded(fn, policy=self.retry, deadline_s=deadline, token=q.qid,
+        out = run_guarded(fn, policy=self.retry, deadline_s=adm.deadline, token=q.qid,
                           clock=self._clock, sleep=self._sleep)
         compiled = self._traces() > traces0
-        self._warm.add(shape)
+        if out.ok or compiled:
+            # warm = the program is cached.  A query that failed before
+            # anything compiled leaves the shape cold — the next query of
+            # that shape still faces the full trace+compile and must get
+            # the cold deadline, not the warm one.
+            self._warm.add(adm.shape)
         # client errors don't indict the server; everything else votes
         if out.ok or out.fault.code != ClientError.code:
-            self.breaker.record(bkey, out.ok)
+            self.breaker.record(adm.bkey, out.ok)
         straggler = False
         if out.ok:
             if compiled:
@@ -365,21 +484,25 @@ class DesignService:
             else:
                 straggler = bool(self.monitor.record(q.qid, out.wall_s))
         return DesignReply(
-            qid=q.qid, kind=q.kind, wall_s=self._clock() - t0, compiled=compiled,
+            qid=q.qid, kind=q.kind, wall_s=self._clock() - adm.t0, compiled=compiled,
             result=out.result, ok=out.ok, error=out.fault,
-            attempts=max(out.attempts, 1), deadline_s=deadline, straggler=straggler,
+            attempts=max(out.attempts, 1), deadline_s=adm.deadline,
+            straggler=straggler, batched=batched, batch_size=batch_size,
         )
 
-    def _handler(self, q: DesignQuery, w, arch) -> Callable[[], Any]:
+    def _handler(self, q: DesignQuery, w, arch, sess) -> Callable[[], Any]:
+        rb = self.request_bucket
         return {
-            "simulate": lambda: self.session.simulate(w, architecture=arch),
-            "explain": lambda: self.session.explain(
-                w, objective=q.objective, architecture=arch
-            ),
-            "optimize": lambda: self.session.optimize(
+            "simulate": lambda: sess.simulate_batch(
+                [w], architectures=[arch], request_bucket=rb
+            )[0],
+            "explain": lambda: sess.explain_batch(
+                [w], objective=q.objective, architectures=[arch], request_bucket=rb
+            )[0],
+            "optimize": lambda: sess.optimize(
                 w, objective=q.objective, architecture=arch, **q.params
             ),
-            "frontier": lambda: self.session.frontier(w, **q.params),
+            "frontier": lambda: sess.frontier(w, **q.params),
         }[q.kind]
 
     def _refuse(self, q: DesignQuery, t0: float, fault) -> DesignReply:
@@ -406,24 +529,166 @@ class DesignService:
         elif code == CircuitOpen.code:
             self._degraded += 1
 
+    def _last_ditch(self, q, e: Exception) -> DesignReply:
+        """Isolation of last resort: a bug in the guard stack itself must
+        still cost only this one query."""
+        fault = classify_exception(e)
+        return DesignReply(
+            qid=getattr(q, "qid", -1), kind=getattr(q, "kind", "?"),
+            wall_s=0.0, compiled=False, result=None, ok=False,
+            error=FaultInfo(code=fault.code, message=str(fault),
+                            attempts=1, retryable=fault.retryable),
+            attempts=1, deadline_s=0.0,
+        )
+
     def _traces(self) -> int:
-        """Traces attributable to this service: its own Session's programs
-        plus the shared engine steps.  Scoped (not the global counter) so a
-        concurrent service compiling its own programs doesn't mislabel this
-        one's warm queries as cold; only the engine tags are shared."""
+        """Traces attributable to this service: every tenant Session's
+        programs plus the shared engine steps.  Scoped (not the global
+        counter) so a concurrent service compiling its own programs doesn't
+        mislabel this one's warm queries as cold; only the engine tags are
+        shared."""
         from repro.core import instrument
 
-        return self.session.stats.traces + instrument.trace_count(
+        return sum(s.stats.traces for s in self._sessions()) + instrument.trace_count(
             "dopt._dopt_step"
         ) + instrument.trace_count("popsim._member_step")
 
     @property
     def stats(self) -> ServiceStats:
-        s = self.session.stats
+        per = [s.stats for s in self._sessions()]
         return ServiceStats(
-            programs=s.programs, hits=s.hits, misses=s.misses, traces=s.traces,
+            programs=per[0].programs,  # the cache is shared: one count
+            hits=sum(s.hits for s in per), misses=sum(s.misses for s in per),
+            traces=sum(s.traces for s in per),
             queries=self._queries, ok=self._ok, retries=self._retries,
             deadline_misses=self._deadline_misses, degraded=self._degraded,
             errors=dict(self._errors), stragglers=tuple(self.monitor.flagged),
             breakers=self.breaker.snapshot(),
+            batches=self._batches, batched_queries=self._batched_queries,
+            tenants=len(self._sessions()),
+        )
+
+
+class BatchingDesignService(DesignService):
+    """:class:`DesignService` with cross-request batching (ROADMAP item 1).
+
+    Queries enter an intake queue; a :class:`~repro.serving.batching.FlushPolicy`
+    flushes on batch size or queue age.  A flush runs intake quarantine for
+    *every* query first (a poison query never joins a batch), groups the
+    admitted simulate/explain queries by ``(kind, spec, bucket, objective)``,
+    and answers each group with ONE vmapped dispatch over a request axis —
+    the same compiled program, padded to ``policy.max_batch``, that the
+    sequential path uses, so coalesced replies are bit-identical to serving
+    the same queries one at a time (pinned by test).
+
+    Every query still runs through the full PR 7 guard stack individually:
+    the coalesced dispatch is lazily memoized inside the first lane's
+    guarded attempt (see :func:`~repro.serving.batching.make_chunk_handlers`),
+    so retries, deadlines, chaos injection, breaker votes and non-finite
+    containment all stay per-query — one bad query in a batch costs only
+    that query.
+
+    ``optimize``/``frontier`` queries pass through the flush as singleton
+    chunks on the sequential path (their useful work is a whole descent;
+    there is nothing to coalesce).
+    """
+
+    def __init__(self, architecture="base", *, policy=None, **kw):
+        from repro.serving.batching import FlushPolicy, IntakeQueue
+
+        self.policy = policy or FlushPolicy()
+        # the flush cap doubles as the pinned request bucket: sequential and
+        # coalesced dispatches share one program => bit-identical replies
+        kw.setdefault("request_bucket", self.policy.max_batch)
+        super().__init__(architecture, **kw)
+        self._queue = IntakeQueue(clock=self._clock)
+
+    # ------------------------------------------------------------- intake --
+    def enqueue(self, q: DesignQuery) -> list[DesignReply]:
+        """Queue one query; flush if the policy says a batch is due.
+        Returns the replies flushed *now* (often empty — they arrive with a
+        later flush).  Never raises."""
+        self._queue.push(q)
+        return self.pump()
+
+    def pump(self) -> list[DesignReply]:
+        """Flush if due (size or queue-age trigger); else no-op."""
+        if self._queue.due(self.policy):
+            return self.flush()
+        return []
+
+    def submit(self, q: DesignQuery) -> DesignReply:
+        """Answer one query immediately (a flush of one — same program,
+        same reply bits as arriving in a full batch)."""
+        return self.serve([q])[0]
+
+    def serve(self, queries: list[DesignQuery]) -> list[DesignReply]:
+        """Answer a batch through the coalescing path.  Per-query isolation
+        holds: len(replies) == len(queries), in order, no exceptions."""
+        if len(self._queue):  # earlier enqueue()d strays answer separately
+            self.flush()
+        for q in queries:
+            self._queue.push(q)
+        return self.flush()
+
+    # -------------------------------------------------------------- flush --
+    def flush(self) -> list[DesignReply]:
+        """Drain the queue and answer everything, coalescing same-shape
+        queries into one dispatch per chunk.  Replies come back in arrival
+        order; accounting matches :meth:`DesignService.submit` exactly."""
+        from repro.serving.batching import make_chunk_handlers, plan_chunks
+
+        items = self._queue.drain()
+        if not items:
+            return []
+        replies: list = [None] * len(items)
+        admitted: list = []
+        for i, (t_enq, q) in enumerate(items):
+            try:
+                prep = self._prepare(q)
+            except Exception as e:
+                prep = self._last_ditch(q, e)
+            if isinstance(prep, DesignReply):
+                replies[i] = prep
+            else:
+                prep.t0 = t_enq  # wall time includes the queue wait
+                admitted.append((i, prep))
+        handler_of: dict = {}
+        size_of: dict = {}
+        for chunk in plan_chunks(admitted, self.policy.max_batch):
+            if len(chunk) < 2:
+                continue  # nothing to coalesce; sequential handler
+            handler_of.update(make_chunk_handlers(chunk, self._dispatch_chunk))
+            for idx, _ in chunk:
+                size_of[idx] = len(chunk)
+            self._batches += 1
+            self._batched_queries += len(chunk)
+        for i, adm in admitted:
+            try:
+                replies[i] = self._complete(
+                    adm, handler_of.get(i),
+                    batched=i in handler_of, batch_size=size_of.get(i, 1),
+                )
+            except Exception as e:
+                replies[i] = self._last_ditch(adm.q, e)
+        for r in replies:
+            self._account(r)
+            self.replies.append(r)
+        return replies
+
+    def _dispatch_chunk(self, adms: list) -> list:
+        """ONE vmapped dispatch answering a whole same-key chunk.  Runs on
+        the default session (programs are shared across tenants, parameter
+        values are traced data — per-lane results match each tenant's own
+        sequential dispatch bit for bit)."""
+        kind = adms[0].q.kind
+        ws = [a.w for a in adms]
+        archs = [a.arch for a in adms]
+        if kind == "simulate":
+            return self.session.simulate_batch(
+                ws, architectures=archs, request_bucket=self.request_bucket
+            )
+        return self.session.explain_batch(
+            ws, objective=adms[0].q.objective, architectures=archs,
+            request_bucket=self.request_bucket,
         )

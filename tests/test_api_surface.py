@@ -182,6 +182,8 @@ def test_report_methods_pinned():
 SESSION_METHODS = (
     "simulate",
     "explain",
+    "simulate_batch",
+    "explain_batch",
     "optimize",
     "frontier",
     "tech_targets",

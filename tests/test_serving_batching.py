@@ -1,0 +1,310 @@
+"""Cross-request batching: flush policy, coalescing plan, bit-identity with
+sequential serving, isolation inside a batch, tenant cache sharing, and the
+token-engine prompt-bucket / PRNG-stream fixes (docs/serving.md)."""
+import dataclasses
+from types import SimpleNamespace
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.serving import (
+    BatchingDesignService,
+    ChaosConfig,
+    ChaosInjector,
+    DeadlineConfig,
+    DesignQuery,
+    DesignService,
+    Engine,
+    FlushPolicy,
+    IntakeQueue,
+    Request,
+    RetryPolicy,
+)
+from repro.serving.batching import batch_key, make_chunk_handlers, plan_chunks
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+# --------------------------------------------------------------------------- #
+# mechanics: policy, queue, chunk planning (no engine involved)
+# --------------------------------------------------------------------------- #
+
+
+class TestFlushPolicy:
+    def test_validation(self):
+        with pytest.raises(ValueError):
+            FlushPolicy(max_batch=0)
+        with pytest.raises(ValueError):
+            FlushPolicy(max_batch=4, min_batch=5)
+        with pytest.raises(ValueError):
+            FlushPolicy(max_delay_s=-1.0)
+
+    def test_queue_flushes_by_size(self):
+        clk = FakeClock()
+        q = IntakeQueue(clock=clk)
+        pol = FlushPolicy(max_batch=3, max_delay_s=10.0)
+        q.push("a"), q.push("b")
+        assert not q.due(pol)  # young and under-size
+        q.push("c")
+        assert q.due(pol)  # size trigger fires regardless of age
+
+    def test_queue_flushes_by_age(self):
+        clk = FakeClock()
+        q = IntakeQueue(clock=clk)
+        pol = FlushPolicy(max_batch=100, max_delay_s=0.5)
+        q.push("a")
+        assert not q.due(pol)
+        clk.t = 0.6  # oldest query is now past the delay budget
+        assert q.due(pol)
+
+    def test_drain_preserves_arrival_order_and_empties(self):
+        clk = FakeClock()
+        q = IntakeQueue(clock=clk)
+        for i in range(3):
+            clk.t = float(i)
+            q.push(i)
+        items = q.drain()
+        assert [x for _, x in items] == [0, 1, 2]
+        assert [t for t, _ in items] == [0.0, 1.0, 2.0]
+        assert len(q) == 0 and not q.due(FlushPolicy())
+
+
+def _adm(kind, spec="s", bucket=(1, 32), objective="edp"):
+    return SimpleNamespace(
+        q=SimpleNamespace(kind=kind, objective=objective),
+        arch=SimpleNamespace(spec=spec),
+        w=SimpleNamespace(bucket=bucket),
+    )
+
+
+class TestChunkPlanning:
+    def test_batch_key_shape(self):
+        assert batch_key(_adm("simulate")) == ("simulate", "s", (1, 32), None)
+        assert batch_key(_adm("explain")) == ("explain", "s", (1, 32), "edp")
+        assert batch_key(_adm("optimize")) is None  # stateful kinds never coalesce
+
+    def test_groups_same_key_and_isolates_singletons(self):
+        admitted = [
+            (0, _adm("simulate")),
+            (1, _adm("optimize")),
+            (2, _adm("simulate")),
+            (3, _adm("simulate", spec="other")),
+        ]
+        chunks = plan_chunks(admitted, max_batch=8)
+        assert [[i for i, _ in c] for c in chunks] == [[0, 2], [1], [3]]
+
+    def test_overflow_starts_fresh_chunk(self):
+        admitted = [(i, _adm("simulate")) for i in range(5)]
+        chunks = plan_chunks(admitted, max_batch=2)
+        assert [[i for i, _ in c] for c in chunks] == [[0, 1], [2, 3], [4]]
+
+    def test_chunk_handlers_dispatch_once_and_memoize(self):
+        chunk = [(10, _adm("simulate")), (11, _adm("simulate"))]
+        calls = []
+
+        def dispatch(adms):
+            calls.append(len(adms))
+            return ["r10", "r11"]
+
+        handlers = make_chunk_handlers(chunk, dispatch)
+        assert handlers[11]() == "r11"  # any lane may arrive first
+        assert handlers[10]() == "r10"
+        assert handlers[11]() == "r11"  # a retry re-reads the memo
+        assert calls == [2]  # the coalesced dispatch ran exactly once
+
+    def test_failed_dispatch_leaves_memo_empty_for_retry(self):
+        chunk = [(0, _adm("simulate"))]
+        calls = []
+
+        def dispatch(adms):
+            calls.append(1)
+            if len(calls) == 1:
+                raise RuntimeError("transient")
+            return ["ok"]
+
+        (handler,) = make_chunk_handlers(chunk, dispatch).values()
+        with pytest.raises(RuntimeError):
+            handler()
+        assert handler() == "ok"  # the retry re-dispatches
+        assert calls == [1, 1]
+
+
+# --------------------------------------------------------------------------- #
+# service level: bit-identity, isolation, warmth ledger, tenants
+# --------------------------------------------------------------------------- #
+
+
+def _mixed_queries(n):
+    kinds = ("simulate", "explain")
+    loads = ("lstm", "merge_sort")  # same (1, 32) bucket -> coalescible
+    archs = (None, "edge")
+    return [
+        DesignQuery(i, kinds[i % 2], loads[(i // 2) % 2],
+                    architecture=archs[(i // 4) % 2])
+        for i in range(n)
+    ]
+
+
+class TestBatchedBitIdentity:
+    def test_batched_replies_equal_sequential_to_json(self):
+        """The acceptance pin: coalescing must not change a single bit of any
+        reply — ``to_json`` serializes every float, so string equality is
+        value equality.  Both services share the default pinned request
+        bucket (FlushPolicy.max_batch == DesignService request_bucket == 8)."""
+        queries = _mixed_queries(8)
+        seq = {r.qid: r.result.to_json()
+               for r in DesignService("base").serve(queries)}
+        bat = BatchingDesignService("base")
+        replies = bat.serve(queries)
+        assert [r.qid for r in replies] == list(range(8))  # original order
+        assert all(r.ok for r in replies)
+        for r in replies:
+            assert r.result.to_json() == seq[r.qid]
+        st = bat.stats
+        assert st.batches >= 1 and st.batched_queries >= 2
+
+    def test_batched_flag_and_size_reported(self):
+        bat = BatchingDesignService("base")
+        replies = bat.serve([DesignQuery(i, "simulate", "lstm") for i in range(3)])
+        assert all(r.batched and r.batch_size == 3 for r in replies)
+        solo = bat.submit(DesignQuery(9, "simulate", "lstm"))
+        assert solo.ok and not solo.batched and solo.batch_size == 1
+
+
+class TestIsolationInsideBatch:
+    def test_poison_query_costs_only_itself(self):
+        bat = BatchingDesignService("base")
+        queries = [
+            DesignQuery(0, "simulate", "lstm"),
+            DesignQuery(1, "simulate", "no_such_workload"),  # intake poison
+            DesignQuery(2, "simulate", "lstm"),
+            DesignQuery(3, "explain", "lstm"),
+        ]
+        replies = bat.serve(queries)
+        assert [r.ok for r in replies] == [True, False, True, True]
+        assert replies[1].error.code == "client-error"
+        assert not replies[1].batched  # quarantined before grouping
+        # the survivors still coalesced: poison never breaks up a batch
+        assert replies[0].batched and replies[2].batched
+        assert replies[0].batch_size == 2
+
+    def test_chaos_fault_on_one_lane_leaves_batchmates_clean(self):
+        queries = [DesignQuery(i, "simulate", "lstm") for i in range(4)]
+        base = {r.qid: r.result.to_json()
+                for r in DesignService("base").serve(queries)}
+        inj = ChaosInjector(ChaosConfig(seed=2, p_nan=0.5), sleep=lambda s: None)
+        bat = BatchingDesignService(
+            "base", chaos=inj, retry=RetryPolicy(max_attempts=4, base_s=0.001))
+        replies = bat.serve(queries)
+        clean = {p.qid for p in inj.schedule(range(4)) if p.clean}
+        assert clean, "seed must leave some lanes untouched"
+        assert all(r.ok for r in replies)  # NaN poisoning clears on retry
+        for r in replies:
+            if r.qid in clean:
+                assert r.result.to_json() == base[r.qid]
+
+
+class TestWarmthLedger:
+    def test_failed_cold_query_does_not_grant_warm_deadline(self):
+        """Regression: a query that died before its program compiled used to
+        mark the shape warm anyway, so the next query got the 2 s warm
+        budget against a 30 s cold compile."""
+        inj = ChaosInjector(
+            ChaosConfig(seed=3, p_compile_fail=1.0, depth=8), sleep=lambda s: None)
+        svc = DesignService("base", chaos=inj,
+                            retry=RetryPolicy(max_attempts=1, base_s=0.001))
+        r0 = svc.submit(DesignQuery(0, "simulate", "lstm"))
+        assert not r0.ok and not r0.compiled
+        r1 = svc.submit(DesignQuery(1, "simulate", "lstm"))
+        assert r1.deadline_s == DeadlineConfig().cold_s  # shape is STILL cold
+
+    def test_successful_query_warms_the_shape(self):
+        svc = DesignService("base")
+        r0 = svc.submit(DesignQuery(0, "simulate", "lstm"))
+        assert r0.ok and r0.deadline_s == DeadlineConfig().cold_s
+        r1 = svc.submit(DesignQuery(1, "simulate", "lstm"))
+        assert r1.deadline_s == DeadlineConfig().warm_s
+
+
+class TestTenants:
+    def test_tenant_sessions_share_the_compiled_program_cache(self):
+        svc = DesignService("base")
+        assert svc.submit(DesignQuery(0, "simulate", "lstm")).ok
+        traces = svc.stats.traces
+        r = svc.submit(DesignQuery(1, "simulate", "lstm", tenant="acme"))
+        assert r.ok
+        st = svc.stats
+        assert st.traces == traces  # warm across tenants: no retrace
+        assert st.tenants == 2
+
+    def test_cross_tenant_coalescing_is_exact(self):
+        q0 = DesignQuery(0, "simulate", "lstm")
+        q1 = DesignQuery(1, "simulate", "lstm", tenant="acme")
+        base = DesignService("base").submit(dataclasses.replace(q0)).result.to_json()
+        bat = BatchingDesignService("base")
+        replies = bat.serve([q0, q1])
+        assert all(r.ok and r.batched for r in replies)
+        assert replies[0].result.to_json() == base
+        assert replies[1].result.to_json() == base
+
+
+# --------------------------------------------------------------------------- #
+# token engine: prompt bucketing + per-request PRNG streams
+# --------------------------------------------------------------------------- #
+
+
+class TestEngineFixes:
+    @pytest.fixture(scope="class")
+    def setup(self):
+        cfg = dataclasses.replace(get_config("granite-3-8b").reduced(),
+                                  dtype="float32")
+        m = build_model(cfg)
+        params = m.init(jax.random.PRNGKey(0))
+        return cfg, m, params
+
+    def test_bucketed_prefill_matches_exact(self, setup):
+        """Padding a prompt to its pow2 bucket must not change a single
+        greedy token: the head reads the true last position and the cache
+        length masks the padding out of attention."""
+        cfg, m, params = setup
+        for plen in (3, 6, 9, 17):
+            prompt = (np.arange(plen, dtype=np.int32) % cfg.vocab_size)
+            outs = []
+            for bucketed in (True, False):
+                eng = Engine(m, params, slots=1, max_len=64)
+                eng._bucket_prompts = bucketed
+                eng.submit(Request(rid=0, prompt=prompt, max_tokens=5))
+                outs.append([int(t) for t in eng.run()[0].generated])
+            assert outs[0] == outs[1], f"prompt length {plen}"
+
+    def test_recurrent_families_keep_exact_prefill(self):
+        cfg = get_config("falcon-mamba-7b").reduced()
+        m = build_model(cfg)
+        eng = Engine(m, m.init(jax.random.PRNGKey(0)), slots=1, max_len=64)
+        assert not eng._bucket_prompts  # ssm state would absorb the padding
+
+    def test_sampled_streams_differ_across_rids(self, setup):
+        """Regression: ``PRNGKey(seed + len(generated))`` gave every request
+        with the same seed the SAME sample stream (and adjacent seeds
+        overlapping streams).  fold_in(rid) separates them."""
+        cfg, m, params = setup
+        prompt = np.arange(6, dtype=np.int32)
+
+        def gen(rid, seed):
+            eng = Engine(m, params, slots=1, max_len=64)
+            eng.submit(Request(rid=rid, prompt=prompt, max_tokens=8,
+                               temperature=1.0, seed=seed))
+            return [int(t) for t in eng.run()[0].generated]
+
+        assert gen(0, 7) == gen(0, 7)  # replay: still deterministic
+        assert gen(0, 7) != gen(5, 7)  # same seed, different request
+        assert gen(0, 7) != gen(0, 8)  # different seed
