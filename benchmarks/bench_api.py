@@ -10,13 +10,28 @@ to ``results/bench/api_cache.json`` (``--quick`` -> ``api_cache_quick.json``):
     original, a different workload, a different design point), each timed;
   * **optimize warm-over-mixes** — two ``optimize(objective="mixed")``
     calls with different weights/budgets: the second must add zero DOpt-step
-    traces (weights are traced arguments, per PR 4).
+    traces (weights are traced arguments, per PR 4);
+  * **cold restart** — a subprocess preheats ``Session(cache_dir=...)``
+    (AOT compile + serialized executables), a *second* subprocess constructs
+    over the same cache_dir and serves its first simulate/explain: the wall
+    from construction to first reply is ``cold_restart_s``, the persistent-
+    cache payoff the ROADMAP item 2 work is gated on.
 
 Acceptance gates (hard-fail, both modes):
   * zero new traces across the whole warm phase;
-  * warm mean wall >= MIN_SPEEDUP x lower than cold.
+  * warm mean wall >= MIN_SPEEDUP x lower than cold;
+  * restart: zero traces in the restarted process, replies bit-identical to
+    the preheating (fresh-compile) process AND to this process's own cold
+    reply, and ``cold_restart_s`` <= MAX_RESTART_FRACTION x ``cold_s``.
 """
 from __future__ import annotations
+
+import json
+import os
+import shutil
+import subprocess
+import sys
+import tempfile
 
 import numpy as np
 
@@ -25,8 +40,101 @@ from repro.api import Architecture, Session, Workload
 from repro.core import instrument
 
 MIN_SPEEDUP = 10.0
+# a restarted worker must answer at least 4x faster than a cold compile
+# (ISSUE 9 gate is 0.25 x cold_s; measured ~0.2s vs ~1.3s, ~6x headroom)
+MAX_RESTART_FRACTION = 0.25
 # one 32-vertex shape bucket, four distinct workloads
 BUCKET_FAMILY = ["lstm", "merge_sort", "dlrm", "gcn"]
+
+# Child 1: preheat the working set into the cache dir.  Its own replies are
+# the fresh-compile reference — preheat AOT-compiled the programs in this
+# very process, so serving through them IS a freshly-compiled session.
+_PREHEAT_CHILD = r"""
+import json, sys, time
+from repro.api import Session
+t0 = time.perf_counter()
+sess = Session("base", cache_dir=sys.argv[1])
+info = sess.preheat(["lstm"], objectives=("edp",), kinds=("simulate", "explain"))
+preheat_s = time.perf_counter() - t0
+sim = sess.simulate("lstm").to_json()
+expl = sess.explain("lstm", objective="edp").to_json()
+print(json.dumps(dict(preheat_s=preheat_s, built=info["built"],
+                      persisted=info["persisted"], sim=sim, expl=expl)))
+"""
+
+# Child 2: the restarted worker.  cold_restart_s covers Session construction
+# (deserializing every cache entry) + the first simulate AND explain — the
+# window a fleet worker is unavailable after a restart.  The workload is
+# prebuilt off the clock to match the parent's cold_s measurement (wls are
+# constructed before the cold timer there); interpreter/jax import time is
+# likewise excluded on both sides of the comparison.
+_RESTART_CHILD = r"""
+import json, sys, time
+from repro.api import Session, Workload
+from repro.core import instrument
+w = Workload("lstm")
+_ = w.stacked  # host-side stacking is cache-independent prep; off the clock
+t0 = time.perf_counter()
+sess = Session("base", cache_dir=sys.argv[1])
+rep = sess.simulate(w)
+expl = sess.explain(w, objective="edp")
+cold_restart_s = time.perf_counter() - t0
+print(json.dumps(dict(cold_restart_s=cold_restart_s, traces=sess.stats.traces,
+                      global_traces=instrument.trace_count(),
+                      disk_loaded=sess.disk_loaded,
+                      sim=rep.to_json(), expl=expl.to_json())))
+"""
+
+
+def _child(code: str, cache_dir: str) -> dict:
+    env = dict(os.environ)
+    src = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run(
+        [sys.executable, "-c", code, cache_dir],
+        capture_output=True, text=True, env=env, timeout=600,
+    )
+    if out.returncode != 0:
+        raise SystemExit(f"bench_api restart child failed:\n{out.stderr}")
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+def restart_bench(cold_s: float, cold_sim_json: str) -> tuple[dict, list]:
+    """The subprocess preheat -> restart measurement + its gate failures."""
+    cache_dir = tempfile.mkdtemp(prefix="dragon-aot-")
+    try:
+        pre = _child(_PREHEAT_CHILD, cache_dir)
+        post = _child(_RESTART_CHILD, cache_dir)
+    finally:
+        shutil.rmtree(cache_dir, ignore_errors=True)
+    checks = []
+    if post["traces"] != 0 or post["global_traces"] != 0:
+        checks.append(
+            f"restarted process traced {post['traces']} session / "
+            f"{post['global_traces']} global programs (must be 0)"
+        )
+    identical = post["sim"] == pre["sim"] and post["expl"] == pre["expl"]
+    if not identical:
+        checks.append("restarted replies not bit-identical to the preheating process")
+    if post["sim"] != cold_sim_json:
+        checks.append("restarted simulate differs from this process's fresh compile")
+    budget = MAX_RESTART_FRACTION * cold_s
+    if post["cold_restart_s"] > budget:
+        checks.append(
+            f"cold_restart_s {post['cold_restart_s']:.3f}s > "
+            f"{MAX_RESTART_FRACTION} x cold_s = {budget:.3f}s"
+        )
+    section = dict(
+        preheat_s=round(pre["preheat_s"], 3),
+        preheat_built=pre["built"],
+        preheat_persisted=pre["persisted"],
+        cold_restart_s=round(post["cold_restart_s"], 4),
+        restart_traces=post["traces"],
+        restart_disk_loaded=post["disk_loaded"],
+        restart_speedup_vs_cold=round(cold_s / max(post["cold_restart_s"], 1e-9), 1),
+        restart_bit_identical=identical,
+    )
+    return section, checks
 
 
 def run(quick: bool = False) -> dict:
@@ -35,7 +143,7 @@ def run(quick: bool = False) -> dict:
     assert len({w.bucket for w in wls.values()}) == 1, "probe family must share a bucket"
 
     # --- cold: first query compiles ---------------------------------------
-    _, cold_s = timed(sess.simulate, wls["lstm"])
+    cold_rep, cold_s = timed(sess.simulate, wls["lstm"])
     cold_traces = sess.stats.traces
 
     # --- warm: same bucket — same workload, new workloads, new design -----
@@ -63,6 +171,9 @@ def run(quick: bool = False) -> dict:
         steps=steps, report=False)
     opt_retraces = instrument.trace_count("dopt._dopt_step") - d0
 
+    # --- cold restart: preheat + persistent cache across processes --------
+    restart, restart_checks = restart_bench(cold_s, cold_rep.to_json())
+
     st = sess.stats
     summary = dict(
         bucket_family=BUCKET_FAMILY,
@@ -77,11 +188,15 @@ def run(quick: bool = False) -> dict:
         speedup_cold_over_warm=round(speedup, 1),
         optimize_mix_change_retraces=int(opt_retraces),
         optimize_warm_s=round(opt_warm_s, 4),
+        cold_restart_s=restart["cold_restart_s"],
+        restart=restart,
         session=dict(programs=st.programs, hits=st.hits, misses=st.misses, traces=st.traces),
     )
     emit("api_cache", dict(cold_s=summary["cold_s"], warm_mean_s=summary["warm_mean_s"],
                            speedup=summary["speedup_cold_over_warm"],
-                           warm_retraces=summary["warm_retraces"]))
+                           warm_retraces=summary["warm_retraces"],
+                           cold_restart_s=summary["cold_restart_s"],
+                           restart_speedup=restart["restart_speedup_vs_cold"]))
 
     checks = []
     if warm_retraces != 0:
@@ -90,6 +205,7 @@ def run(quick: bool = False) -> dict:
         checks.append(f"changed objective mix retraced the DOpt step {opt_retraces}x")
     if speedup < MIN_SPEEDUP:
         checks.append(f"warm speedup {speedup:.1f} < {MIN_SPEEDUP}")
+    checks.extend(restart_checks)
     summary["checks_failed"] = checks
 
     save_json("api_cache", summary, quick=quick)

@@ -49,6 +49,14 @@ recompile; :attr:`Session.stats` reports programs/hits/misses/traces, and
 the trace counts are asserted (not assumed) via
 :mod:`repro.core.instrument`.
 
+The same keys address the *persistent* executable cache:
+``Session(cache_dir=...)`` loads serialized executables written by
+:meth:`Session.preheat` (AOT ``jax.jit(...).lower().compile()``), so a
+restarted process answers its first query with zero traces and replies
+bit-identical to a fresh compile — see :mod:`repro.serving.aotcache` for
+the digest/versioning/quarantine story and ``docs/api.md`` for the
+operator view.
+
 The engine layer (``repro.core.simulate`` / ``optimize`` / ``pareto_dse``
 ...) keeps working as-is for one more release: it is the numerical oracle
 the façade is tested identical against.  New code — and everything under
@@ -60,6 +68,7 @@ from __future__ import annotations
 import dataclasses
 import itertools
 import math
+import time
 from dataclasses import dataclass
 
 import jax
@@ -400,12 +409,19 @@ class Session:
     executable.  Hit/miss/trace *stats* stay per-session (a shared program
     counts as a hit for the session that finds it and traces only under
     the session that built it).
+
+    ``cache_dir`` makes the cache *persistent*: executables built by
+    :meth:`preheat` are serialized to disk
+    (:class:`repro.serving.aotcache.AotCache`), and construction loads
+    every entry matching this runtime back into :attr:`programs` — a
+    restarted process serves its first query with zero traces
+    (:attr:`disk_loaded` reports how many programs arrived that way).
     """
 
     _ids = itertools.count()
 
     def __init__(self, architecture="base", *, mcfg: MapperCfg = MapperCfg(),
-                 programs: dict | None = None):
+                 programs: dict | None = None, cache_dir=None):
         self.architecture = Architecture(architecture)
         self.mcfg = mcfg
         self._tag = f"api.session{next(Session._ids)}"
@@ -416,6 +432,18 @@ class Session:
         self._misses = 0
         self._workload_memo: dict[str, Workload] = {}
         self._arch_memo: dict[str, Architecture] = {}
+        self._aot = None
+        self.disk_loaded = 0  # programs rehydrated from cache_dir at construction
+        if cache_dir is not None:
+            # deferred: the serving package (and its fault taxonomy) only
+            # loads for sessions that opt into persistence
+            from repro.serving.aotcache import AotCache
+
+            self._aot = AotCache(cache_dir)
+            for key, fn in self._aot.load_all().items():
+                if key not in self._programs:
+                    self._programs[key] = fn
+                    self.disk_loaded += 1
 
     @property
     def programs(self) -> dict:
@@ -447,8 +475,18 @@ class Session:
         return Workload(workload)
 
     def _program(self, key: tuple, build):
-        """The compiled-program cache: ``key`` -> jitted callable."""
+        """The compiled-program cache: ``key`` -> jitted callable.
+
+        Misses consult the persistent cache first (an entry another worker
+        preheated after this session started is still a disk hit); only a
+        full miss pays ``build()`` — a jit wrapper that traces on first
+        call.
+        """
         fn = self._programs.get(key)
+        if fn is None and self._aot is not None:
+            fn = self._aot.get(key)
+            if fn is not None:
+                self._programs[key] = fn
         if fn is None:
             self._misses += 1
             fn = self._programs[key] = build()
@@ -479,7 +517,12 @@ class Session:
         )
 
     # ------------------------------------------------------------ programs --
-    def _perf_program(self, bucket, spec: ArchSpec, mcfg: MapperCfg):
+    # Each served program kind is declared as a *spec* — ``(cache key,
+    # build)`` where ``build()`` returns the jit wrapper — so the lazy
+    # first-call path (``_program``) and the AOT path (``preheat``, which
+    # wants ``build().lower(...).compile()`` instead) share one definition.
+
+    def _perf_spec(self, bucket, spec: ArchSpec, mcfg: MapperCfg):
         """jit(simulate_stacked) — byte-identical to the engine call it wraps."""
         tag = f"{self._tag}.simulate"
 
@@ -490,9 +533,12 @@ class Session:
 
             return jax.jit(fn)
 
-        return self._program(("simulate", spec, mcfg, bucket), build)
+        return ("simulate", spec, mcfg, bucket), build
 
-    def _report_program(self, bucket, spec: ArchSpec, mcfg: MapperCfg):
+    def _perf_program(self, bucket, spec: ArchSpec, mcfg: MapperCfg):
+        return self._program(*self._perf_spec(bucket, spec, mcfg))
+
+    def _report_spec(self, bucket, spec: ArchSpec, mcfg: MapperCfg):
         """One program for the whole report: batched PerfEstimate + the
         per-vertex / per-level breakdown extras (simulate_breakdown computes
         both in one pass, so reports cost one compile and one dispatch)."""
@@ -507,9 +553,12 @@ class Session:
 
             return jax.jit(fn)
 
-        return self._program(("report", spec, mcfg, bucket), build)
+        return ("report", spec, mcfg, bucket), build
 
-    def _explain_program(self, bucket, spec: ArchSpec, mcfg: MapperCfg, objective: str):
+    def _report_program(self, bucket, spec: ArchSpec, mcfg: MapperCfg):
+        return self._program(*self._report_spec(bucket, spec, mcfg))
+
+    def _explain_spec(self, bucket, spec: ArchSpec, mcfg: MapperCfg, objective: str):
         """Elasticities d log(objective) / d log(param) for tech AND arch."""
         tag = f"{self._tag}.explain"
 
@@ -527,10 +576,13 @@ class Session:
 
             return jax.jit(fn)
 
-        return self._program(("explain", spec, mcfg, bucket, objective), build)
+        return ("explain", spec, mcfg, bucket, objective), build
+
+    def _explain_program(self, bucket, spec: ArchSpec, mcfg: MapperCfg, objective: str):
+        return self._program(*self._explain_spec(bucket, spec, mcfg, objective))
 
     # ----------------------------------------------------- batched programs --
-    def _batched_report_program(self, nb: int, bucket, spec: ArchSpec, mcfg: MapperCfg):
+    def _batched_report_spec(self, nb: int, bucket, spec: ArchSpec, mcfg: MapperCfg):
         """The report program with a leading *request* axis: one dispatch
         answers ``nb`` same-bucket queries, each with its own (tech, arch,
         gstack).  Keyed by the request bucket too, so warm batches of
@@ -549,9 +601,12 @@ class Session:
 
             return jax.jit(fn)
 
-        return self._program(("report_batched", spec, mcfg, bucket, nb), build)
+        return ("report_batched", spec, mcfg, bucket, nb), build
 
-    def _batched_explain_program(
+    def _batched_report_program(self, nb: int, bucket, spec: ArchSpec, mcfg: MapperCfg):
+        return self._program(*self._batched_report_spec(nb, bucket, spec, mcfg))
+
+    def _batched_explain_spec(
         self, nb: int, bucket, spec: ArchSpec, mcfg: MapperCfg, objective: str
     ):
         """Elasticities with a leading request axis (vmapped grad)."""
@@ -573,8 +628,156 @@ class Session:
 
             return jax.jit(fn)
 
+        return ("explain_batched", spec, mcfg, bucket, objective, nb), build
+
+    def _batched_explain_program(
+        self, nb: int, bucket, spec: ArchSpec, mcfg: MapperCfg, objective: str
+    ):
         return self._program(
-            ("explain_batched", spec, mcfg, bucket, objective, nb), build
+            *self._batched_explain_spec(nb, bucket, spec, mcfg, objective)
+        )
+
+    # ------------------------------------------------------------- preheat --
+    def _bucket_stack(self, item) -> tuple[tuple[int, int], Graph]:
+        """Resolve a preheat target into ``(bucket, example stack)``.
+
+        Accepts anything :class:`Workload` accepts *or* a bare
+        ``(n_workloads, vertex_count)`` bucket tuple, for which a zero-filled
+        stack of that shape is synthesized — compilation depends on array
+        shapes/dtypes only, so the dummy program serves real same-bucket
+        workloads bit-identically.
+        """
+        if (
+            isinstance(item, tuple)
+            and len(item) == 2
+            and all(isinstance(x, (int, np.integer)) for x in item)
+        ):
+            w, vb = int(item[0]), _bucket_vertices(int(item[1]))
+            stack = Graph(
+                n_comp=jnp.zeros((w, vb, len(COMP_CLS)), jnp.float32),
+                n_read=jnp.zeros((w, vb, len(MEM_CLS)), jnp.float32),
+                n_write=jnp.zeros((w, vb, len(MEM_CLS)), jnp.float32),
+                n_alloc=jnp.zeros((w, vb, len(MEM_CLS)), jnp.float32),
+                dims=jnp.zeros((w, vb, 3), jnp.float32),
+                op_kind=jnp.zeros((w, vb), jnp.int32),
+                edges=jnp.zeros((w, 0, 2), jnp.int32),
+                names=(),
+            )
+            return (w, vb), stack
+        wl = self._workload(item)
+        return wl.bucket, wl.stacked
+
+    def _preheat_one(self, key, build, args) -> tuple[bool, bool]:
+        """Ensure one program is compiled (AOT) and persisted.
+
+        Returns ``(built, persisted)``.  An existing in-memory or on-disk
+        program is reused; otherwise the program is built ahead of time via
+        ``build().lower(*args).compile()`` — the same trace a first call
+        would pay, paid now, yielding a serializable executable.
+        """
+        fn = self._programs.get(key)
+        if fn is None and self._aot is not None:
+            fn = self._aot.get(key)
+            if fn is not None:
+                self._programs[key] = fn
+        built = False
+        if fn is None:
+            self._misses += 1
+            fn = self._programs[key] = build().lower(*args).compile()
+            built = True
+        else:
+            self._hits += 1
+        persisted = False
+        if self._aot is not None and not self._aot.has(key):
+            target = fn
+            if not isinstance(fn, jax.stages.Compiled):
+                # snapshot path: the program was first compiled lazily (a
+                # jit wrapper, not serializable) — AOT-compile an equivalent
+                # executable for the disk entry; the in-memory one stays
+                target = build().lower(*args).compile()
+            persisted = self._aot.put(key, target)
+        return built, persisted
+
+    def preheat(
+        self,
+        workloads,
+        *,
+        objectives: tuple[str, ...] = ("edp",),
+        kinds: tuple[str, ...] = ("simulate", "explain"),
+        request_buckets: tuple[int, ...] = (),
+        architecture=None,
+    ) -> dict:
+        """Compile the declared working set ahead of time — no first-call
+        trace latency, and (with ``cache_dir``) no recompiles after restart.
+
+        ``workloads`` is one item or a list: anything :meth:`simulate`
+        accepts, or bare ``(n_workloads, vertex_count)`` bucket tuples when
+        the real graphs don't exist yet (shapes are all compilation needs).
+        ``kinds`` selects program families — ``"simulate"`` (the report
+        program behind :meth:`simulate`), ``"explain"`` (adds the gradient
+        program per objective), ``"perf"`` (the raw :meth:`perf` program).
+        ``request_buckets`` additionally builds the batched-dispatch
+        variants at those pinned request axes (pass the serving layer's
+        ``request_bucket`` — ``DesignService.warmup`` does).
+
+        Programs land in :attr:`programs` as AOT executables and, when the
+        session has a ``cache_dir``, are serialized to disk.  Returns a
+        summary dict: ``programs`` touched, ``built`` (compiled now),
+        ``reused`` (already warm), ``persisted`` (new disk entries),
+        ``seconds``.
+        """
+        a = self._arch(architecture)
+        spec, mcfg = a.spec, self.mcfg
+        if isinstance(workloads, (str, Graph, Workload)) or (
+            isinstance(workloads, tuple)
+            and len(workloads) == 2
+            and all(isinstance(x, (int, np.integer)) for x in workloads)
+        ):
+            workloads = [workloads]
+        kinds = tuple(kinds)
+        unknown = set(kinds) - {"perf", "simulate", "explain"}
+        if unknown:
+            raise ValueError(
+                f"preheat kinds {sorted(unknown)} not in ('perf', 'simulate', 'explain')"
+            )
+        t0 = time.perf_counter()
+        built = reused = persisted = 0
+        seen: set = set()
+        for item in workloads:
+            bucket, gstack = self._bucket_stack(item)
+            if bucket in seen:
+                continue
+            seen.add(bucket)
+            args = (a.tech, a.arch, gstack)
+            jobs = []
+            if "perf" in kinds:
+                jobs.append((self._perf_spec(bucket, spec, mcfg), args))
+            if "simulate" in kinds or "explain" in kinds:
+                jobs.append((self._report_spec(bucket, spec, mcfg), args))
+            if "explain" in kinds:
+                for obj in objectives:
+                    jobs.append((self._explain_spec(bucket, spec, mcfg, obj), args))
+            for nb in request_buckets:
+                nb = int(nb)
+                bargs = jax.tree.map(lambda x: jnp.stack([x] * nb), args)
+                if "simulate" in kinds or "explain" in kinds:
+                    jobs.append((self._batched_report_spec(nb, bucket, spec, mcfg), bargs))
+                if "explain" in kinds:
+                    for obj in objectives:
+                        jobs.append(
+                            (self._batched_explain_spec(nb, bucket, spec, mcfg, obj), bargs)
+                        )
+            for (key, build), eargs in jobs:
+                was_built, was_persisted = self._preheat_one(key, build, eargs)
+                built += was_built
+                reused += not was_built
+                persisted += was_persisted
+        return dict(
+            programs=built + reused,
+            built=built,
+            reused=reused,
+            persisted=persisted,
+            seconds=round(time.perf_counter() - t0, 3),
         )
 
     def _assemble_batch(self, workloads, architectures, request_bucket=None):

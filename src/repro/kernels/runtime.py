@@ -21,6 +21,11 @@ the rest of the codebase never spells a version-specific name:
     compiler-params construction, and scratch plumbing.
   * :func:`clamp_block` / :func:`gcd_block` — centralized block-size clamping.
   * :func:`vmem_scratch` — VMEM scratch allocation without importing pltpu.
+  * :func:`serialize_compiled` / :func:`deserialize_compiled` /
+    :func:`executable_fingerprint` — the executable (de)serialization seam
+    (``jax.experimental.serialize_executable`` on 0.4.x) behind the
+    persistent AOT cache; the fingerprint names the jax/jaxlib/backend an
+    artifact is valid under.
 
 Resolution is performed at call time (never cached) so tests can monkeypatch
 either spelling in and out, and so a process that upgrades its backend
@@ -192,6 +197,74 @@ def vmem_scratch(shape: Sequence[int], dtype) -> Any:
             "no portable scratch spelling)."
         )
     return pltpu.VMEM(tuple(shape), dtype)
+
+
+def executable_fingerprint() -> str:
+    """The runtime identity a serialized executable is only valid under.
+
+    Compiled artifacts are specific to the jax/jaxlib pair that lowered
+    them and the backend they were compiled for; the persistent AOT cache
+    (:mod:`repro.serving.aotcache`) folds this string into every cache-key
+    digest so an upgraded runtime misses cleanly instead of deserializing
+    a stale executable.
+    """
+    import jaxlib
+
+    return f"jax={jax.__version__}|jaxlib={jaxlib.__version__}|backend={jax.default_backend()}"
+
+
+def _serialize_executable_module():
+    """The executable (de)serialization seam of the installed JAX, or None.
+
+    jax 0.4.x ships it as ``jax.experimental.serialize_executable``
+    (``serialize`` / ``deserialize_and_load``); post-0.5 exports may move
+    it — adapt here, nowhere else.
+    """
+    try:
+        from jax.experimental import serialize_executable as se
+    except ImportError:  # pragma: no cover - exercised on future jax
+        return None
+    if not (hasattr(se, "serialize") and hasattr(se, "deserialize_and_load")):
+        return None  # pragma: no cover - exercised on future jax
+    return se
+
+
+def serialize_compiled(compiled) -> bytes | None:
+    """Serialize a ``jax.stages.Compiled`` into one portable byte string.
+
+    Returns ``None`` when the installed JAX has no serialization seam, when
+    ``compiled`` is not an AOT-compiled stage (plain ``jax.jit`` wrappers
+    cannot be snapshotted), or when the backend refuses — callers treat
+    ``None`` as "this program cannot be persisted", never as an error.
+    """
+    se = _serialize_executable_module()
+    if se is None:
+        return None
+    import pickle
+
+    try:
+        payload, in_tree, out_tree = se.serialize(compiled)
+    except Exception:
+        return None
+    return pickle.dumps((payload, in_tree, out_tree), protocol=pickle.HIGHEST_PROTOCOL)
+
+
+def deserialize_compiled(data: bytes):
+    """Rehydrate :func:`serialize_compiled` output into a loaded executable.
+
+    Raises on malformed bytes or a missing seam — the cache layer catches,
+    quarantines the source file, and falls back to a fresh compile.
+    """
+    se = _serialize_executable_module()
+    if se is None:
+        raise RuntimeError(
+            "installed JAX has no executable-serialization seam "
+            "(jax.experimental.serialize_executable); cannot load AOT cache entries"
+        )
+    import pickle
+
+    payload, in_tree, out_tree = pickle.loads(data)
+    return se.deserialize_and_load(payload, in_tree, out_tree)
 
 
 def dragon_pallas_call(

@@ -1,3 +1,4 @@
+from repro.serving.aotcache import AotCache, CacheCorruption, cache_key_digest  # noqa: F401
 from repro.serving.batching import FlushPolicy, IntakeQueue  # noqa: F401
 from repro.serving.chaos import ChaosConfig, ChaosInjector, FaultPlan  # noqa: F401
 from repro.serving.engine import (  # noqa: F401

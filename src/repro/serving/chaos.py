@@ -20,7 +20,12 @@ Fault repertoire (per query, mutually composable):
   * **NaN poisoning** — the attempt's *result* has a headline field replaced
     with NaN (``SimReport.area_mm2`` / ``OptResult.improvement`` /
     ``FrontierResult.hypervolume``), exercising the service's non-finite
-    containment and retry instead of the engines' own in-jit guards.
+    containment and retry instead of the engines' own in-jit guards;
+  * **cache corruption** — the attempt raises
+    :class:`~repro.serving.aotcache.CacheCorruption` before the engine runs,
+    modelling a torn/bit-flipped persistent AOT entry discovered at
+    program-load time (the real reader quarantines the file and falls back
+    to a fresh compile — transient by construction, so retry clears it).
 
 Faults fire on the *leading* attempts of a query only (bounded depth), so a
 retry policy with enough attempts always clears transient-class chaos —
@@ -36,6 +41,7 @@ from typing import Any, Callable
 
 import numpy as np
 
+from repro.serving.aotcache import CacheCorruption
 from repro.serving.resilience import TransientFault
 
 _NAN = float("nan")
@@ -55,28 +61,34 @@ class ChaosConfig:
     p_nan: float = 0.0
     latency_s: float = 0.05
     depth: int = 1
+    p_cache_corrupt: float = 0.0
 
 
 @dataclass(frozen=True)
 class FaultPlan:
     """The chaos verdict for one query: how many leading attempts raise a
-    transient, then how many raise a compile failure, then how many return a
-    NaN-poisoned result; ``latency`` delays the first attempt."""
+    transient, then a compile failure, then a corrupt-cache-entry fault,
+    then how many return a NaN-poisoned result; ``latency`` delays the
+    first attempt."""
 
     qid: int
     transient: int
     compile_fail: int
     nan: int
     latency: bool
+    cache_corrupt: int = 0
 
     @property
     def clean(self) -> bool:
-        return not (self.transient or self.compile_fail or self.nan or self.latency)
+        return not (
+            self.transient or self.compile_fail or self.cache_corrupt
+            or self.nan or self.latency
+        )
 
     @property
     def min_attempts(self) -> int:
         """Attempts a retrying client needs to get a clean answer."""
-        return self.transient + self.compile_fail + self.nan + 1
+        return self.transient + self.compile_fail + self.cache_corrupt + self.nan + 1
 
     def to_json(self) -> dict:
         return dataclasses.asdict(self)
@@ -114,9 +126,13 @@ class ChaosInjector:
     # ----------------------------------------------------------- schedule --
     def plan(self, qid: int) -> FaultPlan:
         c = self.config
+        # the corruption draw comes LAST: PCG64 generates uniforms
+        # sequentially, so draws 0-3 are identical to the historical
+        # 4-draw schedule — adding the fault class never reshuffles
+        # existing seeded schedules
         u = np.random.default_rng(
             np.random.SeedSequence([c.seed & 0xFFFFFFFF, qid & 0xFFFFFFFF])
-        ).random(4)
+        ).random(5)
         d = c.depth
         return FaultPlan(
             qid=qid,
@@ -124,6 +140,7 @@ class ChaosInjector:
             compile_fail=d * int(u[1] < c.p_compile_fail),
             nan=d * int(u[2] < c.p_nan),
             latency=bool(u[3] < c.p_latency),
+            cache_corrupt=d * int(u[4] < c.p_cache_corrupt),
         )
 
     def schedule(self, qids) -> list[FaultPlan]:
@@ -144,8 +161,15 @@ class ChaosInjector:
         if attempt - p.transient < p.compile_fail:
             self.injected["compile_fail"] += 1
             raise TransientFault(f"chaos: injected compile failure (q{qid} attempt {attempt})")
+        if attempt - p.transient - p.compile_fail < p.cache_corrupt:
+            # pre-engine, like the real thing: a torn entry surfaces at
+            # program-load time, before any dispatch
+            self.injected["cache_corrupt"] += 1
+            raise CacheCorruption(
+                f"chaos: injected corrupt cache entry (q{qid} attempt {attempt})"
+            )
         result = handler()
-        if attempt - p.transient - p.compile_fail < p.nan:
+        if attempt - p.transient - p.compile_fail - p.cache_corrupt < p.nan:
             self.injected["nan"] += 1
             bad = poison(result)
             if bad is not result:

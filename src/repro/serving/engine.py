@@ -338,6 +338,10 @@ class DesignService:
         self._default_architecture = architecture
         self._session_kw = dict(session_kw)
         self._session_kw.pop("programs", None)
+        # tenants share the default session's programs dict, which already
+        # holds everything cache_dir rehydrated — reloading per tenant would
+        # only burn construction time
+        self._session_kw.pop("cache_dir", None)
         # every serving dispatch — sequential or coalesced — pads its request
         # axis to this one bucket, so ONE compiled program serves every batch
         # size and replies are bit-identical however queries were batched
@@ -385,6 +389,42 @@ class DesignService:
 
     def _sessions(self):
         return [self.session, *self._tenants.values()]
+
+    # ------------------------------------------------------------- warmup --
+    def warmup(self, workloads, *, objectives: tuple[str, ...] = ("edp",),
+               kinds: tuple[str, ...] = ("simulate", "explain")) -> dict:
+        """Preheat the service's declared working set at startup.
+
+        Builds (AOT) the exact batched programs :meth:`submit` dispatches —
+        pinned to this service's ``request_bucket`` — plus the sequential
+        variants, and persists them when the service was constructed with
+        ``cache_dir=...``.  A worker that calls ``warmup`` before taking
+        traffic serves every declared shape with zero traces and the *warm*
+        deadline from its first query; a restarted worker gets the same
+        guarantee from the disk entries alone.  Returns the
+        :meth:`repro.api.Session.preheat` summary dict.
+        """
+        return self.session.preheat(
+            workloads, objectives=objectives, kinds=kinds,
+            request_buckets=(self.request_bucket,),
+        )
+
+    def _preheated(self, kind: str, spec, bucket, objective: str) -> bool:
+        """Disk/AOT warmth: True when every program ``kind`` dispatches for
+        this shape is already in the shared cache, so the first serve pays
+        dispatch only.  optimize/frontier run in the engines' own jit caches
+        — preheat can't see those, so they are never disk-warm."""
+        programs = self.session.programs
+        mcfg = self.session.mcfg
+        rb = self.request_bucket
+        if kind == "simulate":
+            return ("report_batched", spec, mcfg, bucket, rb) in programs
+        if kind == "explain":
+            return (
+                ("report_batched", spec, mcfg, bucket, rb) in programs
+                and ("explain_batched", spec, mcfg, bucket, objective, rb) in programs
+            )
+        return False
 
     # ------------------------------------------------------------- intake --
     def submit(self, q: DesignQuery) -> DesignReply:
@@ -440,7 +480,13 @@ class DesignService:
                 f"(cooldown {self.breaker.cooldown_s:.1f}s)"
             ))
         shape = (q.kind, arch.spec, w.bucket, q.objective)
-        cold = shape not in self._warm
+        # a shape is warm if it was served before (the PR 8 ledger) OR if
+        # its programs were preheated / rehydrated from the persistent
+        # cache — a restarted worker must predict warm deadlines from its
+        # first query, not after re-learning every shape the hard way
+        cold = shape not in self._warm and not self._preheated(
+            q.kind, arch.spec, w.bucket, q.objective
+        )
         deadline = q.deadline_s if q.deadline_s is not None else \
             self.deadlines.budget_s(cold, q.kind)
         return _Admitted(q=q, t0=t0, w=w, arch=arch, sess=sess, bkey=bkey,

@@ -189,6 +189,7 @@ SESSION_METHODS = (
     "tech_targets",
     "perf",
     "trace_programs",
+    "preheat",
 )
 
 
@@ -196,6 +197,9 @@ def test_session_surface():
     for name in SESSION_METHODS:
         assert callable(getattr(api.Session, name)), f"Session.{name} missing"
     assert isinstance(api.Session.stats, property)
+    sig = inspect.signature(api.Session.preheat)
+    for p in ("workloads", "objectives", "kinds", "request_buckets"):
+        assert p in sig.parameters
     sig = inspect.signature(api.Session.optimize)
     for p in ("objective", "steps", "lr", "opt_over", "architecture"):
         assert p in sig.parameters

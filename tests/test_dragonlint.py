@@ -96,6 +96,29 @@ class TestKernelSeam:
     def test_out_of_scope_path_ignored(self):
         assert not lint("examples/demo.py", self.BAD)
 
+    # the executable-serialization spellings joined the seam with the AOT
+    # cache: only kernels/runtime.py may touch jax.experimental.serialize_executable
+    BAD_SERIALIZE = """
+        from jax.experimental import serialize_executable as se
+        blob = se.serialize(compiled)
+        fn = se.deserialize_and_load(*blob)
+        """
+    GOOD_SERIALIZE = """
+        from repro.kernels import runtime
+        blob = runtime.serialize_compiled(compiled)
+        fn = runtime.deserialize_compiled(blob)
+        """
+
+    def test_fires_on_executable_serialization_spelling(self):
+        found = names(lint("src/repro/serving/aotcache.py", self.BAD_SERIALIZE))
+        assert "kernel-seam" in found
+
+    def test_silent_on_runtime_serialization_wrapper(self):
+        assert not lint("src/repro/serving/aotcache.py", self.GOOD_SERIALIZE)
+
+    def test_serialization_allowed_in_runtime_seam(self):
+        assert not lint("src/repro/kernels/runtime.py", self.BAD_SERIALIZE)
+
 
 class TestApiSurface:
     def test_fires_on_engine_module_import(self):

@@ -234,6 +234,42 @@ class TestWarmthLedger:
         r1 = svc.submit(DesignQuery(1, "simulate", "lstm"))
         assert r1.deadline_s == DeadlineConfig().warm_s
 
+    @pytest.fixture(scope="class")
+    def preheated_service(self, tmp_path_factory):
+        cache_dir = str(tmp_path_factory.mktemp("warmth-aot"))
+        svc = DesignService("base", cache_dir=cache_dir)
+        svc.warmup(["lstm"], kinds=("simulate",))
+        return svc, cache_dir
+
+    def test_preheated_shape_is_predicted_warm_on_first_serve(
+        self, preheated_service
+    ):
+        """Regression (ISSUE 9): before the disk-warmth check, a preheated
+        service still predicted its very first query cold and granted the
+        30 s budget for a sub-ms replay."""
+        svc, _ = preheated_service
+        r = svc.submit(DesignQuery(0, "simulate", "lstm"))
+        assert r.ok and not r.compiled
+        assert r.deadline_s == DeadlineConfig().warm_s
+
+    def test_restarted_service_over_cache_dir_is_warm_from_query_one(
+        self, preheated_service
+    ):
+        _, cache_dir = preheated_service
+        svc = DesignService("base", cache_dir=cache_dir)
+        r = svc.submit(DesignQuery(0, "simulate", "lstm"))
+        assert r.ok and not r.compiled
+        assert r.deadline_s == DeadlineConfig().warm_s
+        assert svc.stats.traces == 0
+
+    def test_unpreheated_kind_stays_cold(self, preheated_service):
+        """Disk warmth is per-(kind, objective): simulate was preheated,
+        explain was not — its first query still deserves the cold budget."""
+        svc, _ = preheated_service
+        r = svc.submit(DesignQuery(9, "explain", "lstm", objective="edp"))
+        assert r.ok
+        assert r.deadline_s == DeadlineConfig().cold_s
+
 
 class TestTenants:
     def test_tenant_sessions_share_the_compiled_program_cache(self):

@@ -200,6 +200,7 @@ def _line(text: str, lineno: int) -> str:
 
 KERNEL_SEAM_PATTERN = re.compile(
     r"CompilerParams|shard_map|\bpltpu\b|pallas\s+import\s+tpu|pl\.pallas_call"
+    r"|serialize_executable|deserialize_and_load"
 )
 KERNEL_SEAM_ALLOWED = ("kernels/runtime.py",)
 
@@ -207,7 +208,7 @@ KERNEL_SEAM_ALLOWED = ("kernels/runtime.py",)
 @rule(
     "kernel-seam",
     doc="version-fragile JAX spellings (pallas_call / shard_map / TPU compiler "
-        "params) must stay inside kernels/runtime.py",
+        "params / executable serialization) must stay inside kernels/runtime.py",
     scan=("src/",),
 )
 def kernel_seam(rel: str, text: str, tree: ast.AST) -> Iterator[Finding]:
