@@ -17,6 +17,18 @@ Three sections, all written to ``results/bench/serving.json``:
   program at one pinned request bucket, so replies are bit-identical
   (asserted).  The QPS gain is HARD-GATED at > 1.5x.
 
+* **design.pooled / design.multiprocess** — the serving-pool tier on the
+  same mixed stream: the staged-dispatch :class:`PooledDesignService`
+  (dispatcher thread + bounded worker pool, staging-buffer assembly) and
+  the 2-worker :class:`MultiProcessDesignService` (worker processes over
+  one shared preheated AOT cache).  Replies are bit-identical to the
+  sequential baseline (asserted).  HARD-GATED: full run, pooled and
+  multi-process QPS each > 1.5x the batched service; quick (the CI
+  probe), availability == 1.0 and pooled QPS >= the batched QPS.  The
+  full run also injects seeded **worker kills** (``p_worker_kill``) and
+  gates kills >= 1, requeues >= 1, availability == 1.0 — a crashed
+  worker's in-flight queries must be re-enqueued and answered exactly.
+
 * **chaos** — the PR 7 resilience gates, now run against the BATCHED
   path (availability (fraction of queries answered ok within deadline),
   p50/p99 reply latency, retry and injection counts), with four hard
@@ -39,6 +51,7 @@ run on an idle machine).
 from __future__ import annotations
 
 import argparse
+import tempfile
 import time
 
 import jax
@@ -55,6 +68,8 @@ from repro.serving import (
     DesignService,
     Engine,
     FlushPolicy,
+    MultiProcessDesignService,
+    PooledDesignService,
     Request,
     RetryPolicy,
 )
@@ -208,7 +223,98 @@ def design_bench(quick: bool = False) -> dict:
             f"GATE FAILED: batched design-query QPS gain {gain:.2f}x <= 1.5x — "
             "cross-request coalescing must buy real throughput"
         )
+
+    out.update(_pool_bench(queries, fp_seq, out["batched"]["qps"], quick=quick))
     return out
+
+
+def _pool_bench(queries, fp_seq: dict, batched_qps: float, *, quick: bool) -> dict:
+    """The serving-pool tier on the same stream: threaded staged pool +
+    2-worker multi-process fleet over a shared preheated AOT cache, each
+    hard-gated on throughput, bit-identity and (mp) crash containment."""
+    n = len(queries)
+    policy = FlushPolicy(max_batch=_REQUEST_BUCKET, max_delay_s=0.005)
+    retry = RetryPolicy(max_attempts=4, base_s=0.005)
+    out: dict = {}
+
+    # threaded pool: dispatcher thread + staged assembly, 2 workers
+    with PooledDesignService("base", workers=2, policy=policy, retry=retry) as pool:
+        t0 = time.perf_counter()
+        replies = pool.serve(queries)
+        wall = time.perf_counter() - t0
+    out["pooled"] = dict(workers=2, qps=round(n / wall, 1), wall_s=round(wall, 2),
+                         ok=int(sum(r.ok for r in replies)), **_lat_ms(replies))
+    emit("serving.design", dict(mode="pooled", **out["pooled"]))
+    _gate_identical(fp_seq, _fingerprints(replies), "pooled")
+
+    # multi-process: the parent preheats ONE shared cache dir, workers
+    # rehydrate from it (zero compiles) — QPS measured after ready
+    cache_dir = tempfile.mkdtemp(prefix="dragon-bench-aot-")
+    parent = BatchingDesignService("base", policy=policy, cache_dir=cache_dir)
+    parent.warmup(["lstm", "merge_sort", "gcn", "stencil2d"])
+    with MultiProcessDesignService("base", workers=2, cache_dir=cache_dir,
+                                   policy=policy, retry=retry) as mp:
+        t0 = time.perf_counter()
+        replies = mp.serve(queries)
+        wall = time.perf_counter() - t0
+        traces = mp.stats.traces
+    out["multiprocess"] = dict(workers=2, qps=round(n / wall, 1),
+                               wall_s=round(wall, 2),
+                               ok=int(sum(r.ok for r in replies)),
+                               worker_traces=traces, **_lat_ms(replies))
+    emit("serving.design", dict(mode="multiprocess", **out["multiprocess"]))
+    _gate_identical(fp_seq, _fingerprints(replies), "multiprocess")
+
+    for mode in ("pooled", "multiprocess"):
+        row = out[mode]
+        row["qps_vs_batched"] = round(row["qps"] / max(batched_qps, 1e-9), 2)
+        if row["ok"] != n:
+            raise SystemExit(
+                f"GATE FAILED: {mode} availability {row['ok']}/{n} != 1.0"
+            )
+        floor = 1.0 if quick else 1.5
+        hard = row["qps_vs_batched"] >= floor if quick else row["qps_vs_batched"] > floor
+        if not hard:
+            raise SystemExit(
+                f"GATE FAILED: {mode} QPS {row['qps']} is {row['qps_vs_batched']}x "
+                f"the batched service (floor {floor}x) — the pool must buy real "
+                "throughput, not just concurrency"
+            )
+    emit("serving.design", dict(pooled_gain=out["pooled"]["qps_vs_batched"],
+                                multiprocess_gain=out["multiprocess"]["qps_vs_batched"]))
+
+    # seeded worker-kill chaos: a crashed worker's in-flight queries must be
+    # requeued onto the survivor and answered bit-identically
+    chaos = ChaosConfig(seed=_SEED, p_worker_kill=0.1)
+    with MultiProcessDesignService("base", workers=2, cache_dir=cache_dir,
+                                   policy=policy, retry=retry, chaos=chaos) as mpk:
+        replies = mpk.serve(queries)
+        info = mpk.pool_info
+    out["worker_kill"] = dict(kills=info["kills"], requeues=info["requeues"],
+                              ok=int(sum(r.ok for r in replies)),
+                              alive=info["alive"])
+    emit("serving.design", dict(mode="worker_kill", **out["worker_kill"]))
+    if info["kills"] < 1 or info["requeues"] < 1:
+        raise SystemExit(
+            f"GATE FAILED: worker-kill chaos injected kills={info['kills']} "
+            f"requeues={info['requeues']} — the crash fault must actually fire"
+        )
+    if out["worker_kill"]["ok"] != n:
+        raise SystemExit(
+            f"GATE FAILED: availability {out['worker_kill']['ok']}/{n} != 1.0 "
+            "under worker-kill chaos — requeue must restore every in-flight query"
+        )
+    _gate_identical(fp_seq, _fingerprints(replies), "worker_kill")
+    return out
+
+
+def _gate_identical(fp_seq: dict, fp_got: dict, mode: str) -> None:
+    mismatch = [q for q in fp_seq if fp_seq[q] != fp_got.get(q)]
+    if mismatch:
+        raise SystemExit(
+            f"GATE FAILED: {len(mismatch)} {mode} replies differ from sequential "
+            f"(qids {sorted(mismatch)[:8]}) — the pool must not change answers"
+        )
 
 
 # --------------------------------------------------------------------------- #

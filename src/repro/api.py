@@ -68,6 +68,7 @@ from __future__ import annotations
 import dataclasses
 import itertools
 import math
+import threading
 import time
 from dataclasses import dataclass
 
@@ -432,6 +433,9 @@ class Session:
         self._misses = 0
         self._workload_memo: dict[str, Workload] = {}
         self._arch_memo: dict[str, Architecture] = {}
+        # the pooled serving tier dispatches chunks from worker threads that
+        # share one session; cache lookups and build bookkeeping stay atomic
+        self._plock = threading.RLock()
         self._aot = None
         self.disk_loaded = 0  # programs rehydrated from cache_dir at construction
         if cache_dir is not None:
@@ -480,19 +484,21 @@ class Session:
         Misses consult the persistent cache first (an entry another worker
         preheated after this session started is still a disk hit); only a
         full miss pays ``build()`` — a jit wrapper that traces on first
-        call.
+        call.  Thread-safe: concurrent pool workers racing the same key get
+        one build and consistent hit/miss counts.
         """
-        fn = self._programs.get(key)
-        if fn is None and self._aot is not None:
-            fn = self._aot.get(key)
-            if fn is not None:
-                self._programs[key] = fn
-        if fn is None:
-            self._misses += 1
-            fn = self._programs[key] = build()
-        else:
-            self._hits += 1
-        return fn
+        with self._plock:
+            fn = self._programs.get(key)
+            if fn is None and self._aot is not None:
+                fn = self._aot.get(key)
+                if fn is not None:
+                    self._programs[key] = fn
+            if fn is None:
+                self._misses += 1
+                fn = self._programs[key] = build()
+            else:
+                self._hits += 1
+            return fn
 
     def _engine_call(self, key: tuple) -> None:
         """Bookkeeping for calls whose program lives in the *engine's* jit
@@ -855,6 +861,13 @@ class Session:
         techs, arch_ps, gstacks = stacked
         prog = self._batched_report_program(nb, ws[0].bucket, archs[0].spec, self.mcfg)
         perfs, extras = prog(techs, arch_ps, gstacks)
+        return self._reports_from_batch(ws, archs, perfs, extras)
+
+    def _reports_from_batch(self, ws, archs, perfs, extras) -> list[SimReport]:
+        """Finish a batched report dispatch: slice the ``[nb]``-leading
+        program outputs back into per-lane :class:`SimReport`\\ s.  Shared by
+        :meth:`simulate_batch` and the serving pool's staging-buffer
+        dispatcher, so both paths build reports from identical bits."""
         # one device->host sync for the whole batch, then numpy views per lane
         perfs = jax.tree.map(np.asarray, perfs)
         extras = {k: np.asarray(v) for k, v in extras.items()}
@@ -885,6 +898,13 @@ class Session:
             nb, ws[0].bucket, archs[0].spec, self.mcfg, objective
         )
         g_techs, g_archs = prog(techs, arch_ps, gstacks)
+        return self._attribute_batch(reports, g_techs, g_archs, objective)
+
+    def _attribute_batch(self, reports, g_techs, g_archs, objective) -> list[SimReport]:
+        """Finish a batched explain dispatch: rank the ``[nb]``-leading
+        gradient outputs into per-lane attributions.  Shared by
+        :meth:`explain_batch` and the serving pool's staging-buffer
+        dispatcher."""
         g_techs = jax.tree.map(np.asarray, g_techs)
         g_archs = jax.tree.map(np.asarray, g_archs)
         names = [f"tech.{n}" for n in tech_param_names()] + [

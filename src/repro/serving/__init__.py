@@ -10,6 +10,12 @@ from repro.serving.engine import (  # noqa: F401
     Request,
     ServiceStats,
 )
+from repro.serving.pool import (  # noqa: F401
+    MultiProcessDesignService,
+    PooledDesignService,
+    StagedBatchingService,
+)
+from repro.serving.protocol import ProtocolError, recv_frame, send_frame  # noqa: F401
 from repro.serving.resilience import (  # noqa: F401
     CircuitBreaker,
     CircuitOpen,

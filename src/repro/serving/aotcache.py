@@ -187,7 +187,12 @@ class AotCache:
             ),
             protocol=pickle.HIGHEST_PROTOCOL,
         )
-        fd, tmp = tempfile.mkstemp(dir=self.path, suffix=".tmp")
+        # multi-writer safe: N worker processes racing the same digest each
+        # write a private tmp (mkstemp randomizes the name; the pid suffix
+        # additionally namespaces writers, and makes a stray tmp attributable
+        # post-mortem) and publish via atomic rename — last rename wins with
+        # byte-identical content, readers never observe a torn file
+        fd, tmp = tempfile.mkstemp(dir=self.path, suffix=f".{os.getpid()}.tmp")
         try:
             with os.fdopen(fd, "wb") as f:
                 f.write(_MAGIC + hashlib.sha256(body).digest() + body)

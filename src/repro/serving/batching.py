@@ -25,6 +25,7 @@ touches the memo — retries of that lane return its clean slice.
 """
 from __future__ import annotations
 
+import threading
 import time
 from dataclasses import dataclass
 from typing import Any, Callable, Optional
@@ -68,23 +69,28 @@ class IntakeQueue:
     """Arrival-ordered intake queue with enqueue timestamps.
 
     The clock is injectable so tests (and the deterministic bench) can
-    drive the age-based flush trigger without sleeping.
+    drive the age-based flush trigger without sleeping.  Push/drain are
+    lock-guarded: the pooled service pushes from caller threads while its
+    dispatcher thread drains.
     """
 
     def __init__(self, clock: Callable[[], float] = time.monotonic):
         self._clock = clock
+        self._lock = threading.Lock()
         self._items: list = []  # (t_enqueue, query)
 
     def __len__(self) -> int:
         return len(self._items)
 
     def push(self, query: Any) -> None:
-        self._items.append((self._clock(), query))
+        with self._lock:
+            self._items.append((self._clock(), query))
 
     def oldest_age(self) -> float:
-        if not self._items:
-            return 0.0
-        return self._clock() - self._items[0][0]
+        with self._lock:
+            if not self._items:
+                return 0.0
+            return self._clock() - self._items[0][0]
 
     def due(self, policy: FlushPolicy) -> bool:
         n = len(self._items)
@@ -96,7 +102,8 @@ class IntakeQueue:
 
     def drain(self) -> list:
         """Pop everything, in arrival order, as ``(t_enqueue, query)``."""
-        items, self._items = self._items, []
+        with self._lock:
+            items, self._items = self._items, []
         return items
 
 

@@ -25,7 +25,12 @@ Fault repertoire (per query, mutually composable):
     :class:`~repro.serving.aotcache.CacheCorruption` before the engine runs,
     modelling a torn/bit-flipped persistent AOT entry discovered at
     program-load time (the real reader quarantines the file and falls back
-    to a fresh compile — transient by construction, so retry clears it).
+    to a fresh compile — transient by construction, so retry clears it);
+  * **worker kill** — not injected by :meth:`ChaosInjector.call` at all:
+    the multi-process coordinator (``repro.serving.pool``) reads
+    ``plan(qid).worker_kill`` and SIGKILLs the worker process a marked
+    query was assigned to, once per qid, exercising crash detection and
+    in-flight requeue.  In-process services ignore the flag.
 
 Faults fire on the *leading* attempts of a query only (bounded depth), so a
 retry policy with enough attempts always clears transient-class chaos —
@@ -34,6 +39,7 @@ this is the property the CI chaos probe hard-gates at availability == 1.0.
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
 from collections import Counter
 from dataclasses import dataclass
@@ -62,6 +68,7 @@ class ChaosConfig:
     latency_s: float = 0.05
     depth: int = 1
     p_cache_corrupt: float = 0.0
+    p_worker_kill: float = 0.0
 
 
 @dataclass(frozen=True)
@@ -77,6 +84,10 @@ class FaultPlan:
     nan: int
     latency: bool
     cache_corrupt: int = 0
+    # coordinator-enacted (process death), not an attempt fault: the query
+    # is re-enqueued and re-served whole, so it does not affect clean /
+    # min_attempts — a killed-and-requeued query still answers bit-identically
+    worker_kill: bool = False
 
     @property
     def clean(self) -> bool:
@@ -122,17 +133,21 @@ class ChaosInjector:
         self.config = config
         self.sleep = sleep
         self.injected: Counter = Counter()
+        # the pooled service runs attempts from several threads; the ledger
+        # (not the schedule, which is pure) needs the lock
+        self._lock = threading.Lock()
 
     # ----------------------------------------------------------- schedule --
     def plan(self, qid: int) -> FaultPlan:
         c = self.config
-        # the corruption draw comes LAST: PCG64 generates uniforms
-        # sequentially, so draws 0-3 are identical to the historical
-        # 4-draw schedule — adding the fault class never reshuffles
-        # existing seeded schedules
+        # new fault classes always draw LAST: PCG64 generates uniforms
+        # sequentially, so draws 0-3 are identical to the historical 4-draw
+        # schedule and draw 4 to the 5-draw one — adding a fault class
+        # never reshuffles existing seeded schedules (cache_corrupt joined
+        # at index 4, worker_kill at index 5)
         u = np.random.default_rng(
             np.random.SeedSequence([c.seed & 0xFFFFFFFF, qid & 0xFFFFFFFF])
-        ).random(5)
+        ).random(6)
         d = c.depth
         return FaultPlan(
             qid=qid,
@@ -141,6 +156,7 @@ class ChaosInjector:
             nan=d * int(u[2] < c.p_nan),
             latency=bool(u[3] < c.p_latency),
             cache_corrupt=d * int(u[4] < c.p_cache_corrupt),
+            worker_kill=bool(u[5] < c.p_worker_kill),
         )
 
     def schedule(self, qids) -> list[FaultPlan]:
@@ -153,29 +169,33 @@ class ChaosInjector:
         """Run one attempt of ``handler`` under the query's fault plan."""
         p = self.plan(qid)
         if p.latency and attempt == 0:
-            self.injected["latency"] += 1
+            self._count("latency")
             self.sleep(self.config.latency_s)
         if attempt < p.transient:
-            self.injected["transient"] += 1
+            self._count("transient")
             raise TransientFault(f"chaos: injected transient fault (q{qid} attempt {attempt})")
         if attempt - p.transient < p.compile_fail:
-            self.injected["compile_fail"] += 1
+            self._count("compile_fail")
             raise TransientFault(f"chaos: injected compile failure (q{qid} attempt {attempt})")
         if attempt - p.transient - p.compile_fail < p.cache_corrupt:
             # pre-engine, like the real thing: a torn entry surfaces at
             # program-load time, before any dispatch
-            self.injected["cache_corrupt"] += 1
+            self._count("cache_corrupt")
             raise CacheCorruption(
                 f"chaos: injected corrupt cache entry (q{qid} attempt {attempt})"
             )
         result = handler()
         if attempt - p.transient - p.compile_fail - p.cache_corrupt < p.nan:
-            self.injected["nan"] += 1
             bad = poison(result)
             if bad is not result:
+                self._count("nan")
                 return bad
-            self.injected["nan"] -= 1  # nothing poisonable in this result type
+            # nothing poisonable in this result type: no injection recorded
         return result
+
+    def _count(self, fault: str, n: int = 1) -> None:
+        with self._lock:
+            self.injected[fault] += n
 
     # ----------------------------------------------------------------- info --
     def summary(self) -> dict:

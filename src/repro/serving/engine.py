@@ -21,6 +21,7 @@ cold/warm split that the cache-key semantics (docs/api.md) guarantee.
 """
 from __future__ import annotations
 
+import threading
 import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, Optional
@@ -271,6 +272,54 @@ class ServiceStats:
         """Fraction of queries answered ok within their deadline."""
         return self.ok / self.queries if self.queries else 1.0
 
+    def merge(self, other: "ServiceStats") -> "ServiceStats":
+        """Lossless aggregation of two workers' ledgers (the coordinator's
+        fleet view).  Query counters, cache lookups and error codes sum;
+        stragglers concatenate; breaker lanes merge key-wise (a lane is open
+        fleet-wide if any worker's is; trips/rejections sum).  ``programs``
+        and ``tenants`` sum *resident* executables/sessions — right for
+        worker processes with private caches, an overcount when services
+        share one programs dict (each reports the same residency).
+
+        Partition-invariance — per-worker stats summed over any split of a
+        query stream equal the sequential run's ledger — holds because every
+        per-query outcome (chaos schedule, retry jitter, deadline class) is
+        keyed on the query, never on worker identity or completion order;
+        ``tests/test_serving_pool.py`` pins it as a property test.
+        """
+        errors = dict(self.errors)
+        for code, n in other.errors.items():
+            errors[code] = errors.get(code, 0) + n
+        breakers = {k: dict(v) for k, v in self.breakers.items()}
+        for key, st in other.breakers.items():
+            if key in breakers:
+                mine = breakers[key]
+                breakers[key] = dict(
+                    open=bool(mine["open"] or st["open"]),
+                    failures=mine["failures"] + st["failures"],
+                    trips=mine["trips"] + st["trips"],
+                    rejected=mine["rejected"] + st["rejected"],
+                )
+            else:
+                breakers[key] = dict(st)
+        return ServiceStats(
+            programs=self.programs + other.programs,
+            hits=self.hits + other.hits, misses=self.misses + other.misses,
+            traces=self.traces + other.traces,
+            queries=self.queries + other.queries, ok=self.ok + other.ok,
+            retries=self.retries + other.retries,
+            deadline_misses=self.deadline_misses + other.deadline_misses,
+            degraded=self.degraded + other.degraded,
+            errors=errors, stragglers=self.stragglers + other.stragglers,
+            breakers=breakers,
+            batches=self.batches + other.batches,
+            batched_queries=self.batched_queries + other.batched_queries,
+            tenants=self.tenants + other.tenants,
+        )
+
+    def __add__(self, other: "ServiceStats") -> "ServiceStats":
+        return self.merge(other)
+
 
 @dataclass
 class _Admitted:
@@ -358,6 +407,10 @@ class DesignService:
         self.monitor = monitor or StragglerMonitor()
         self._clock = clock
         self._sleep = sleep
+        # guards shared mutable state (ledger, breaker, monitor, warmth) when
+        # the pooled service completes queries from several threads; the
+        # engine dispatch itself runs OUTSIDE this lock so chunks overlap
+        self._mutex = threading.RLock()
         self._warm: set = set()  # (kind, spec, bucket, objective) shapes served
         self.replies: list[DesignReply] = []
         self._queries = 0
@@ -376,16 +429,17 @@ class DesignService:
         every other, but stats and memos never leak across tenants."""
         if tenant is None:
             return self.session
-        sess = self._tenants.get(tenant)
-        if sess is None:
-            from repro.api import Session
+        with self._mutex:
+            sess = self._tenants.get(tenant)
+            if sess is None:
+                from repro.api import Session
 
-            sess = self._tenants[tenant] = Session(
-                self._default_architecture,
-                programs=self.session.programs,
-                **self._session_kw,
-            )
-        return sess
+                sess = self._tenants[tenant] = Session(
+                    self._default_architecture,
+                    programs=self.session.programs,
+                    **self._session_kw,
+                )
+            return sess
 
     def _sessions(self):
         return [self.session, *self._tenants.values()]
@@ -512,23 +566,25 @@ class DesignService:
         out = run_guarded(fn, policy=self.retry, deadline_s=adm.deadline, token=q.qid,
                           clock=self._clock, sleep=self._sleep)
         compiled = self._traces() > traces0
-        if out.ok or compiled:
-            # warm = the program is cached.  A query that failed before
-            # anything compiled leaves the shape cold — the next query of
-            # that shape still faces the full trace+compile and must get
-            # the cold deadline, not the warm one.
-            self._warm.add(adm.shape)
-        # client errors don't indict the server; everything else votes
-        if out.ok or out.fault.code != ClientError.code:
-            self.breaker.record(adm.bkey, out.ok)
-        straggler = False
-        if out.ok:
-            if compiled:
-                # a cold compile is *expected* to be slow: reset the latency
-                # baseline instead of polluting the EWMA / flagging it
-                self.monitor.reprime(out.wall_s)
-            else:
-                straggler = bool(self.monitor.record(q.qid, out.wall_s))
+        with self._mutex:
+            if out.ok or compiled:
+                # warm = the program is cached.  A query that failed before
+                # anything compiled leaves the shape cold — the next query of
+                # that shape still faces the full trace+compile and must get
+                # the cold deadline, not the warm one.
+                self._warm.add(adm.shape)
+            # client errors don't indict the server; everything else votes
+            if out.ok or out.fault.code != ClientError.code:
+                self.breaker.record(adm.bkey, out.ok)
+            straggler = False
+            if out.ok:
+                if compiled:
+                    # a cold compile is *expected* to be slow: reset the
+                    # latency baseline instead of polluting the EWMA /
+                    # flagging it
+                    self.monitor.reprime(out.wall_s)
+                else:
+                    straggler = bool(self.monitor.record(q.qid, out.wall_s))
         return DesignReply(
             qid=q.qid, kind=q.kind, wall_s=self._clock() - adm.t0, compiled=compiled,
             result=out.result, ok=out.ok, error=out.fault,
@@ -563,17 +619,18 @@ class DesignService:
 
     # ----------------------------------------------------------- plumbing --
     def _account(self, r: DesignReply) -> None:
-        self._queries += 1
-        self._retries += max(0, r.attempts - 1)
-        if r.ok:
-            self._ok += 1
-            return
-        code = r.error.code if r.error else "fault"
-        self._errors[code] = self._errors.get(code, 0) + 1
-        if code == DeadlineExceeded.code:
-            self._deadline_misses += 1
-        elif code == CircuitOpen.code:
-            self._degraded += 1
+        with self._mutex:
+            self._queries += 1
+            self._retries += max(0, r.attempts - 1)
+            if r.ok:
+                self._ok += 1
+                return
+            code = r.error.code if r.error else "fault"
+            self._errors[code] = self._errors.get(code, 0) + 1
+            if code == DeadlineExceeded.code:
+                self._deadline_misses += 1
+            elif code == CircuitOpen.code:
+                self._degraded += 1
 
     def _last_ditch(self, q, e: Exception) -> DesignReply:
         """Isolation of last resort: a bug in the guard stack itself must
@@ -639,6 +696,12 @@ class BatchingDesignService(DesignService):
     there is nothing to coalesce).
     """
 
+    #: smallest batchable chunk routed through :meth:`_dispatch_chunk`;
+    #: below it the sequential handler runs.  The staged pool subclass
+    #: lowers this to 1 — its dispatcher is faster than the sequential
+    #: assembly path even for a single lane.
+    _coalesce_min = 2
+
     def __init__(self, architecture="base", *, policy=None, **kw):
         from repro.serving.batching import FlushPolicy, IntakeQueue
 
@@ -682,7 +745,7 @@ class BatchingDesignService(DesignService):
         """Drain the queue and answer everything, coalescing same-shape
         queries into one dispatch per chunk.  Replies come back in arrival
         order; accounting matches :meth:`DesignService.submit` exactly."""
-        from repro.serving.batching import make_chunk_handlers, plan_chunks
+        from repro.serving.batching import batch_key, make_chunk_handlers, plan_chunks
 
         items = self._queue.drain()
         if not items:
@@ -702,18 +765,19 @@ class BatchingDesignService(DesignService):
         handler_of: dict = {}
         size_of: dict = {}
         for chunk in plan_chunks(admitted, self.policy.max_batch):
-            if len(chunk) < 2:
+            if len(chunk) < self._coalesce_min or batch_key(chunk[0][1]) is None:
                 continue  # nothing to coalesce; sequential handler
             handler_of.update(make_chunk_handlers(chunk, self._dispatch_chunk))
             for idx, _ in chunk:
                 size_of[idx] = len(chunk)
-            self._batches += 1
-            self._batched_queries += len(chunk)
+            if len(chunk) > 1:  # a size-1 staged dispatch is not a coalesce
+                self._batches += 1
+                self._batched_queries += len(chunk)
         for i, adm in admitted:
             try:
                 replies[i] = self._complete(
                     adm, handler_of.get(i),
-                    batched=i in handler_of, batch_size=size_of.get(i, 1),
+                    batched=size_of.get(i, 1) > 1, batch_size=size_of.get(i, 1),
                 )
             except Exception as e:
                 replies[i] = self._last_ditch(adm.q, e)

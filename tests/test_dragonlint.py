@@ -36,6 +36,7 @@ EXPECTED_RULES = (
     "api-surface",
     "dhdl-corpus",
     "float64-promotion",
+    "fork-unsafe",
     "host-sync",
     "kernel-seam",
     "retrace-hazard",
@@ -441,6 +442,56 @@ class TestFloat64Promotion:
                 return np.asarray(xs, np.float64).mean()
             """
         assert not lint("src/repro/core/x.py", good)
+
+
+class TestForkUnsafe:
+    def test_fires_on_os_fork(self):
+        bad = """
+            import os
+
+            def spawn_worker():
+                pid = os.fork()
+            """
+        assert "fork-unsafe" in names(lint("src/repro/serving/pool.py", bad))
+
+    def test_fires_on_default_multiprocessing_process(self):
+        bad = """
+            import multiprocessing
+
+            def spawn_worker(fn):
+                p = multiprocessing.Process(target=fn)
+                p.start()
+            """
+        assert "fork-unsafe" in names(lint("src/repro/serving/pool.py", bad))
+
+    def test_fires_on_explicit_fork_context(self):
+        bad = """
+            import multiprocessing
+
+            ctx = multiprocessing.get_context("fork")
+            """
+        assert "fork-unsafe" in names(lint("src/repro/serving/pool.py", bad))
+
+    def test_silent_on_subprocess_spawn(self):
+        good = """
+            import subprocess
+            import sys
+
+            def spawn_worker(argv):
+                return subprocess.Popen([sys.executable, "-m", "repro.serving.worker"] + argv)
+            """
+        assert not lint("src/repro/serving/pool.py", good)
+
+    def test_silent_on_spawn_context(self):
+        good = """
+            import multiprocessing
+
+            ctx = multiprocessing.get_context("spawn")
+            """
+        assert not lint("src/repro/serving/pool.py", good)
+
+    def test_out_of_scope_path_ignored(self):
+        assert not lint("benchmarks/bench_x.py", "import os\npid = os.fork()\n")
 
 
 # --------------------------------------------------------------------------- #

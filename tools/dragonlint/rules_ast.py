@@ -626,3 +626,53 @@ def float64_promotion(rel: str, text: str, tree: ast.AST) -> Iterator[Finding]:
                                       "bare `float` dtype promotes to float64 under "
                                       "x64 — spell jnp.float32",
                                       _line(text, node.lineno))
+
+
+# --------------------------------------------------------------------------- #
+# serving-contract rule: fork-unsafe
+# --------------------------------------------------------------------------- #
+
+_FORK_CALLS = {"os.fork", "os.forkpty"}
+_MP_FACTORIES = {"multiprocessing.Process", "multiprocessing.Pool",
+                 "mp.Process", "mp.Pool"}
+_CTX_CALLS = {"get_context", "set_start_method"}
+
+
+@rule(
+    "fork-unsafe",
+    doc="os.fork / fork-start multiprocessing deadlock an imported JAX runtime "
+        "(its internal thread pools don't survive fork) — spawn worker "
+        "processes via subprocess or an explicit 'spawn' context",
+    scan=("src/",),
+)
+def fork_unsafe(rel: str, text: str, tree: ast.AST) -> Iterator[Finding]:
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        name = _dotted(node.func)
+        if name in _FORK_CALLS:
+            yield Finding("fork-unsafe", rel, node.lineno,
+                          f"{name}() forks the process — a forked JAX runtime "
+                          "deadlocks on its thread pools; spawn a fresh "
+                          "interpreter (subprocess / 'spawn' context) instead",
+                          _line(text, node.lineno))
+        elif name in _MP_FACTORIES:
+            # bare Process()/Pool() default to fork on Linux; a spawn-context
+            # handle (ctx.Process where ctx = get_context("spawn")) resolves
+            # to a different dotted name and passes
+            yield Finding("fork-unsafe", rel, node.lineno,
+                          f"{name}(...) uses the platform default start method "
+                          "(fork on Linux) — JAX is already initialized here; "
+                          "use subprocess or get_context('spawn')",
+                          _line(text, node.lineno))
+        elif (
+            name is not None
+            and name.split(".")[-1] in _CTX_CALLS
+            and node.args
+            and isinstance(node.args[0], ast.Constant)
+            and node.args[0].value == "fork"
+        ):
+            yield Finding("fork-unsafe", rel, node.lineno,
+                          "explicit 'fork' start method — a forked JAX runtime "
+                          "deadlocks; request 'spawn'",
+                          _line(text, node.lineno))
